@@ -1,0 +1,40 @@
+"""Framework benchmarks: Connector-backed data-pipeline ingest."""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.connectors import MemoryConnector
+from repro.data import (DataPipelineConfig, ShardedTokenDataset,
+                        synthetic_corpus)
+
+from .common import QUICK, emit
+
+
+def run() -> dict:
+    out = {}
+    conn = MemoryConnector()
+    n_records = 128 if QUICK else 512
+    synthetic_corpus(conn, "corpus", vocab_size=32000, seq_len=512,
+                     n_records=n_records, records_per_shard=64)
+
+    for mode in ("plain", "prefetch"):
+        cfg = DataPipelineConfig(seq_len=512, batch_size=8, prefetch=4)
+        ds = ShardedTokenDataset(conn, "corpus", cfg)
+        it = ds.prefetching_batches() if mode == "prefetch" else ds.batches()
+        n_batches = n_records // 8
+        t0 = time.monotonic()
+        tok = 0
+        for _, b in zip(range(n_batches), it):
+            tok += b["tokens"].size
+            # simulate a 1 ms train step so prefetch can overlap
+            time.sleep(0.001)
+        dt = time.monotonic() - t0
+        out[mode] = tok / dt
+        emit(f"data.ingest.{mode}", dt, f"{tok / dt / 1e6:.2f}M tok/s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

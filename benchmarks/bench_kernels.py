@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — numbers demonstrate
+the harness; real performance is the TPU roofline in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.checksum.ops import checksum_digest
+
+from .common import QUICK, emit
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # warmup/compile
+    t0 = time.monotonic()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    return (time.monotonic() - t0) / n
+
+
+def run() -> dict:
+    out = {}
+    B, S, H, KV, dh = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+    t = _time(lambda: flash_attention(q, k, v, causal=True, window=None))
+    out["flash_attention"] = t
+    emit("kernels.flash_attention.interp", t, f"B{B} S{S} H{H} dh{dh}")
+    t = _time(lambda: attention_ref(q, k, v, causal=True, window=None))
+    emit("kernels.flash_attention.ref", t, "jnp oracle")
+
+    T, Hh, K = 64, 2, 16
+    qs = jax.random.normal(ks[0], (1, T, Hh, K)) * 0.5
+    ksс = jax.random.normal(ks[1], (1, T, Hh, K)) * 0.5
+    vs = jax.random.normal(ks[2], (1, T, Hh, K)) * 0.5
+    g = -jnp.exp(jax.random.normal(ks[1], (1, T, Hh, K)) - 1.5)
+    t = _time(lambda: ssm_scan(qs, ksс, vs, g, chunk=32, subchunk=8))
+    out["ssm_scan"] = t
+    emit("kernels.ssm_scan.interp", t, f"T{T} H{Hh} K{K}")
+
+    x = jax.random.normal(ks[2], (1 << 16,), jnp.float32)
+    t = _time(lambda: checksum_digest(x, use_pallas=True))
+    out["checksum"] = t
+    emit("kernels.checksum.interp", t, "64K floats")
+    t = _time(lambda: checksum_digest(x, use_pallas=False))
+    emit("kernels.checksum.jnp", t, "64K floats")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Paper §5 / Figs. 6-11 + Table 1: transfer time vs number of files at
+fixed total size; OLS regression -> per-file overhead t0 and network
+efficiency alpha; Pearson rho validates linearity."""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.core import TransferOptions
+from repro.core.perfmodel import fit_perf_model
+
+from .common import (DATASET_LARGE, DATASET_SMALL, QUICK, emit, make_env,
+                     seed_bucket, seed_local_files, split_dataset,
+                     transfer_model_seconds, native_upload_seconds,
+                     native_download_seconds, Endpoint)
+
+N_FILES = [8, 16, 32] if QUICK else [10, 20, 40, 80]
+
+#: provider -> (dataset size, has conn-cloud placement) — mirrors the
+#: paper's matrix (Wasabi/Drive/Box have no in-cloud DTN option).
+MATRIX = {
+    "s3": (DATASET_LARGE, True),
+    "wasabi": (DATASET_LARGE, False),
+    "gcs": (DATASET_LARGE, True),
+    "drive": (DATASET_SMALL, False),
+    "box": (DATASET_SMALL, False),
+    "ceph": (DATASET_LARGE, True),
+}
+
+
+def _routes_for(env, provider, has_cloud):
+    storage, conn_local = env.cloud(provider, "local")
+    routes = {"conn-local": (storage, conn_local)}
+    if has_cloud:
+        conn_cloud = type(conn_local)(storage, placement="cloud",
+                                      clock=env.clock)
+        env.creds.register(conn_cloud.name, env.creds.lookup(conn_local.name))
+        routes["conn-cloud"] = (storage, conn_cloud)
+    return storage, routes
+
+
+def run(full: bool = True) -> dict:
+    """Returns {route: PerfModel}; emits one CSV row per fitted model."""
+    providers = list(MATRIX) if full else ["s3", "drive"]
+    models = {}
+    pearson_rows = []
+    # The paper's §5 regression runs at concurrency 1; with a single
+    # stream the virtual clock measures the modeled time exactly.
+    OPTS = dict(concurrency=1, parallelism=4)
+    S0_CONN, S0_NATIVE = 2.3, 0.15   # resolved independently in bench_startup
+    for provider in providers:
+        total, has_cloud = MATRIX[provider]
+        with tempfile.TemporaryDirectory() as tmp:
+            env = make_env(tmp, virtual=True)
+            storage, routes = _routes_for(env, provider, has_cloud)
+            native = env.native(storage)
+
+            # ---------- uploads (local files -> cloud) ----------
+            for route_name, (sto, conn) in routes.items():
+                times = []
+                for n in N_FILES:
+                    parts = split_dataset(total, n)
+                    src = seed_local_files(env, f"up_{provider}_{n}", parts)
+                    t = transfer_model_seconds(
+                        env, Endpoint(env.local, src),
+                        Endpoint(conn, f"bkt/up{n}", conn.name),
+                        TransferOptions(**OPTS))
+                    times.append(t)
+                    sto.blobs._objs.clear()
+                m = fit_perf_model(f"{provider}/{route_name}/up",
+                                   N_FILES, times, total, s0=S0_CONN)
+                models[m.route] = m
+                pearson_rows.append((f"To {provider} ({route_name})", m.rho))
+                emit(f"perfile.{provider}.{route_name}.upload",
+                     times[-1], f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
+                     f" rho={m.rho:.3f}")
+            # native upload
+            times = []
+            for n in N_FILES:
+                parts = split_dataset(total, n)
+                t = native_upload_seconds(env, native, parts, f"nu{n}")
+                times.append(t)
+                storage.blobs._objs.clear()
+            m = fit_perf_model(f"{provider}/native/up", N_FILES, times, total,
+                               s0=S0_NATIVE)
+            models[m.route] = m
+            pearson_rows.append((f"To {provider} (native)", m.rho))
+            emit(f"perfile.{provider}.native.upload", times[-1],
+                 f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s rho={m.rho:.3f}")
+
+            # ---------- downloads (cloud -> local files) ----------
+            for route_name, (sto, conn) in routes.items():
+                times = []
+                for n in N_FILES:
+                    parts = split_dataset(total, n)
+                    seed_bucket(sto, f"down{n}", parts)
+                    t = transfer_model_seconds(
+                        env, Endpoint(conn, f"down{n}", conn.name),
+                        Endpoint(env.local, f"dl_{provider}_{route_name}_{n}"),
+                        TransferOptions(**OPTS))
+                    times.append(t)
+                m = fit_perf_model(f"{provider}/{route_name}/down",
+                                   N_FILES, times, total, s0=S0_CONN)
+                models[m.route] = m
+                pearson_rows.append((f"From {provider} ({route_name})", m.rho))
+                emit(f"perfile.{provider}.{route_name}.download",
+                     times[-1], f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
+                     f" rho={m.rho:.3f}")
+            # native download
+            times = []
+            for n in N_FILES:
+                parts = split_dataset(total, n)
+                seed_bucket(storage, f"nd{n}", parts)
+                keys = [f"nd{n}/f{i:04d}.bin" for i in range(n)]
+                times.append(native_download_seconds(env, native, keys))
+            m = fit_perf_model(f"{provider}/native/down", N_FILES, times,
+                               total, s0=S0_NATIVE)
+            models[m.route] = m
+            pearson_rows.append((f"From {provider} (native)", m.rho))
+            emit(f"perfile.{provider}.native.download", times[-1],
+                 f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s rho={m.rho:.3f}")
+
+    # Table 1 analog: all correlations should be ~1
+    min_rho = min(r for _, r in pearson_rows)
+    emit("perfile.pearson_table.min_rho", 0.0,
+         f"min_rho={min_rho:.3f} over {len(pearson_rows)} routes")
+    return models
+
+
+if __name__ == "__main__":
+    run()

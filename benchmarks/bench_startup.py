@@ -1,0 +1,56 @@
+"""Paper §5.4 / Fig. 12: single-file size sweep resolves the transfer
+startup cost S0 (Eq. 6): third-party managed transfers pay coordination
+cost; two-party native clients pay only login."""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.core import TransferOptions
+from repro.core.perfmodel import fit_startup_cost
+
+from .common import (MB, QUICK, emit, make_env, payload, seed_local_files,
+                     timed, transfer_model_seconds, Endpoint)
+
+SIZES_MB = [4, 12, 20, 28] if QUICK else [8, 24, 40, 56, 72]
+
+
+def run() -> dict:
+    out = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        env = make_env(tmp, virtual=True)
+        storage, conn = env.cloud("wasabi", "local")
+        native = env.native(storage)
+
+        # managed third-party transfer (Globus role)
+        times = []
+        for mb in SIZES_MB:
+            src = seed_local_files(env, f"s{mb}", [payload(mb * MB)])
+            t = transfer_model_seconds(
+                env, Endpoint(env.local, f"{src}/f0000.bin"),
+                Endpoint(conn, f"b/one{mb}.bin", conn.name),
+                TransferOptions(concurrency=1, parallelism=4))
+            times.append(t)
+            storage.blobs._objs.clear()
+        s0, tu = fit_startup_cost([m * MB for m in SIZES_MB], times)
+        out["connector"] = s0
+        emit("startup.connector.s0", s0,
+             f"S0={s0:.2f}s t_u={tu * 1e9:.2f}s/GB (paper: 2.3s)")
+
+        # two-party native API
+        times = []
+        for mb in SIZES_MB:
+            def go():
+                native.login()
+                native.upload_bytes(payload(mb * MB), f"n/one{mb}.bin")
+            times.append(timed(go, env))
+            storage.blobs._objs.clear()
+        s0n, tun = fit_startup_cost([m * MB for m in SIZES_MB], times)
+        out["native"] = s0n
+        emit("startup.native.s0", s0n,
+             f"S0={s0n:.2f}s t_u={tun * 1e9:.2f}s/GB")
+    return out
+
+
+if __name__ == "__main__":
+    run()

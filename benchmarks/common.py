@@ -1,0 +1,193 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+The cloud/WAN environment is emulated (offline container) with model
+constants scaled by ``REPRO_BENCH_SCALE`` (default 0.02: a 50 s model
+transfer takes 1 s of wall clock).  All benchmarks measure *wall clock*
+around the scaled emulation, then report model seconds (wall / scale),
+so numbers are comparable to the paper's qualitative behaviour.
+
+Dataset sizes are scaled ~20x down from the paper (5 GB -> 256 MB,
+1 GB -> 64 MB) to keep the suite fast; per-file-overhead phenomena are
+size-independent, which is the point of the paper's model.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (Credential, CredentialStore, Endpoint,
+                        TransferOptions, TransferService)
+from repro.core.clock import Clock
+from repro.connectors import (MemoryConnector, ObjectStoreConnector,
+                              PosixConnector, make_cloud)
+from repro.connectors.cloud import NativeClient, PROFILES
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.02"))
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+MB = 1024 * 1024
+DATASET_LARGE = 64 * MB if QUICK else 256 * MB   # paper: 5 GB
+DATASET_SMALL = 16 * MB if QUICK else 64 * MB    # paper: 1 GB
+
+
+@dataclass
+class Env:
+    clock: Clock
+    tmpdir: str
+    local: PosixConnector
+    creds: CredentialStore
+    service: TransferService
+    virtual: bool = False
+
+    def cloud(self, provider: str, placement: str = "local", **overrides):
+        storage = make_cloud(provider, clock=self.clock, **overrides)
+        conn = ObjectStoreConnector(storage, placement=placement,
+                                    clock=self.clock)
+        self.creds.register(conn.name, Credential(conn.credential_scheme, {}))
+        return storage, conn
+
+    def native(self, storage) -> NativeClient:
+        return NativeClient(storage, clock=self.clock)
+
+    def endpoint(self, conn, path):
+        return Endpoint(conn, path, conn.name if hasattr(conn, "name")
+                        else "local")
+
+
+def make_env(tmpdir: str, scale: float | None = None,
+             virtual: bool = False) -> Env:
+    """``virtual=True``: scale=0 (no real sleeping) and measurements read
+    the virtual clock — exact for concurrency-1 workloads (the paper's
+    §5 regression setting), since all modeled waits are sequential.
+    Concurrency sweeps need ``virtual=False`` (real overlap, wall clock).
+    """
+    clock = Clock(scale=0.0 if virtual else (SCALE if scale is None
+                                             else scale))
+    local = PosixConnector(os.path.join(tmpdir, "site"))
+    creds = CredentialStore()
+    service = TransferService(credential_store=creds,
+                              marker_root=os.path.join(tmpdir, "markers"),
+                              clock=clock)
+    return Env(clock=clock, tmpdir=tmpdir, local=local, creds=creds,
+               service=service, virtual=virtual)
+
+
+_payload_cache: dict[int, bytes] = {}
+
+
+def payload(nbytes: int) -> bytes:
+    if nbytes not in _payload_cache:
+        _payload_cache[nbytes] = np.random.default_rng(0).bytes(nbytes)
+    return _payload_cache[nbytes]
+
+
+def split_dataset(total: int, n_files: int) -> list[bytes]:
+    per = total // n_files
+    blob = payload(total)
+    return [blob[i * per:(i + 1) * per] for i in range(n_files)]
+
+
+def seed_local_files(env: Env, name: str, parts: list[bytes]) -> str:
+    root = os.path.join(env.tmpdir, "site", name)
+    os.makedirs(root, exist_ok=True)
+    for i, part in enumerate(parts):
+        with open(os.path.join(root, f"f{i:04d}.bin"), "wb") as f:
+            f.write(part)
+    return name
+
+
+def seed_bucket(storage, prefix: str, parts: list[bytes]) -> None:
+    for i, part in enumerate(parts):
+        storage.blobs.put(f"{prefix}/f{i:04d}.bin", part)
+
+
+def timed(fn, env: Env | None = None) -> float:
+    """Model seconds: virtual-clock delta in virtual mode, else
+    wall / scale."""
+    if env is not None and env.virtual:
+        v0 = env.clock.virtual_elapsed
+        fn()
+        return env.clock.virtual_elapsed - v0
+    t0 = time.monotonic()
+    fn()
+    wall = time.monotonic() - t0
+    scale = env.clock.scale if env is not None else SCALE
+    return wall / max(scale, 1e-9)
+
+
+def transfer_model_seconds(env: Env, src: Endpoint, dst: Endpoint,
+                           options: TransferOptions) -> float:
+    def go():
+        task = env.service.submit(src, dst, options, sync=True)
+        assert task.status == task.SUCCEEDED, task.events[-5:]
+
+    return timed(go, env)
+
+
+def native_upload_seconds(env: Env, client: NativeClient, parts: list[bytes],
+                          prefix: str, concurrency: int = 1) -> float:
+    import threading
+
+    def go():
+        client.login()
+        if concurrency == 1:
+            for i, part in enumerate(parts):
+                client.upload_bytes(part, f"{prefix}/f{i:04d}.bin")
+            return
+        idx = list(range(len(parts)))
+        lock = threading.Lock()
+
+        def worker():
+            while True:
+                with lock:
+                    if not idx:
+                        return
+                    i = idx.pop(0)
+                client.upload_bytes(parts[i], f"{prefix}/f{i:04d}.bin")
+
+        ts = [threading.Thread(target=worker) for _ in range(concurrency)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    return timed(go, env)
+
+
+def native_download_seconds(env: Env, client: NativeClient, keys: list[str],
+                            concurrency: int = 1) -> float:
+    import threading
+
+    def go():
+        client.login()
+        if concurrency == 1:
+            for k in keys:
+                client.download_bytes(k)
+            return
+        idx = list(range(len(keys)))
+        lock = threading.Lock()
+
+        def worker():
+            while True:
+                with lock:
+                    if not idx:
+                        return
+                    i = idx.pop(0)
+                client.download_bytes(keys[i])
+
+        ts = [threading.Thread(target=worker) for _ in range(concurrency)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    return timed(go, env)
+
+
+def emit(name: str, model_seconds: float, derived: str = "") -> None:
+    """The runner's required CSV: name,us_per_call,derived."""
+    print(f"{name},{model_seconds * 1e6:.0f},{derived}")

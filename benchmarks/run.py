@@ -1,0 +1,52 @@
+"""Benchmark runner — one harness per paper table/figure plus framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows (us_per_call is
+model-microseconds for emulated-transfer benches; see common.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small N / fewer providers")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: perfile,startup,"
+                         "throughput,integrity,intercloud,ckpt,data,kernels")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    # import AFTER the env flag so common.py picks it up
+    from . import (bench_ckpt, bench_data, bench_integrity,
+                   bench_intercloud, bench_kernels, bench_perfile,
+                   bench_startup, bench_throughput)
+
+    suites = {
+        "perfile": bench_perfile.run,        # Figs 6-11 + Table 1
+        "startup": bench_startup.run,        # Fig 12 (Eq. 6)
+        "throughput": bench_throughput.run,  # Figs 13-16
+        "intercloud": bench_intercloud.run,  # Figs 17-18
+        "integrity": bench_integrity.run,    # Figs 19-21
+        "ckpt": bench_ckpt.run,              # framework: §8 coalescing
+        "data": bench_data.run,              # framework: ingest
+        "kernels": bench_kernels.run,        # framework: pallas kernels
+    }
+    wanted = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    t0 = time.monotonic()
+    for name in wanted:
+        print(f"# --- {name} ---", file=sys.stderr)
+        suites[name]()
+    print(f"# total wall: {time.monotonic() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Transfer lab: reproduce the paper's §5-§8 experiment suite in one
+script (emulated providers, virtual clock — instant).
+
+Prints the per-(provider x placement x direction) fitted models, the
+Pearson table (paper Table 1), the startup cost (Fig 12), integrity
+overhead (Figs 19-21), and the §8 best-practice recommendations derived
+from the fitted models.
+
+Run:  PYTHONPATH=src:. python examples/transfer_lab.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+os.environ.setdefault("REPRO_BENCH_QUICK", "1")
+
+
+def main():
+    from benchmarks import bench_perfile, bench_startup, bench_integrity
+    from repro.core import Advisor, Route
+
+    print("== per-file overhead regression (paper §5, Figs 6-11) ==")
+    models = bench_perfile.run(full=False)
+
+    print("\n== startup cost (paper §5.4, Fig 12) ==")
+    s0 = bench_startup.run()
+
+    print("\n== integrity checking (paper §7, Figs 19-21) ==")
+    bench_integrity.run()
+
+    print("\n== §8 best practices, derived from the fitted models ==")
+    adv = Advisor([Route(name, m) for name, m in models.items()])
+    for n_files, gb in ((1000, 1), (10, 50)):
+        route, cc, eta = adv.best(n_files, int(gb * 1e9))
+        print(f"  {n_files} files / {gb} GB -> {route.name} cc={cc} "
+              f"(predicted {eta:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

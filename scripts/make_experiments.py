@@ -1,0 +1,127 @@
+"""Regenerate the §Dry-run / §Roofline tables in EXPERIMENTS.md from
+results/*.json.  Run after (re-)running the dry-run sweep:
+
+    PYTHONPATH=src python scripts/make_experiments.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+ARCH_ORDER = [
+    "jamba-1.5-large-398b", "dbrx-132b", "granite-moe-1b-a400m",
+    "granite-20b", "h2o-danube-3-4b", "qwen1.5-110b", "qwen1.5-0.5b",
+    "whisper-medium", "rwkv6-7b", "llava-next-mistral-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SKIPPED_LONG = {"dbrx-132b", "granite-moe-1b-a400m", "granite-20b",
+                "qwen1.5-110b", "qwen1.5-0.5b", "whisper-medium"}
+
+
+def load() -> dict:
+    recs = {}
+    for p in glob.glob(os.path.join(RESULTS, "dryrun_*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        recs[key] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 1024**3:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | status | bytes/dev (args+temps GB) | "
+            "flops/dev (raw) | collective bytes/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            if shape == "long_500k" and arch in SKIPPED_LONG:
+                rows.append(f"| {arch} | {shape} | — | SKIP (full attention;"
+                            f" DESIGN.md §3) | — | — | — | — |")
+                continue
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    rows.append(f"| {arch} | {shape} | {mesh} | PENDING | — |"
+                                f" — | — | — |")
+                elif not r.get("ok"):
+                    rows.append(f"| {arch} | {shape} | {mesh} | FAIL: "
+                                f"{r.get('error', '')[:60]} | — | — | — | — |")
+                else:
+                    gb = (r["bytes_per_dev_argument"]
+                          + r["bytes_per_dev_temp"]) / 1024**3
+                    raw = r.get("raw_cost", {})
+                    rows.append(
+                        f"| {arch} | {shape} | {mesh} | OK | {gb:.2f} | "
+                        f"{raw.get('flops', 0):.2e} | "
+                        f"{raw.get('coll_total', 0):.2e} | "
+                        f"{r.get('compile_seconds', 0):.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | "
+            "what would move the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "16x16"))
+            if r is None or not r.get("ok"):
+                continue
+            if r.get("note", "").startswith("raw"):
+                suffix = " (raw)"
+            else:
+                suffix = ""
+            hint = _hint(r)
+            rows.append(
+                f"| {arch} | {shape} | {r['t_compute']:.3f} | "
+                f"{r['t_memory']:.3f} | {r['t_collective']:.3f} | "
+                f"{r['bottleneck']}{suffix} | {r['model_flops_global']:.2e} | "
+                f"{r['useful_ratio']:.2f} | {r['peak_fraction']:.3f} | "
+                f"{hint} |")
+    return "\n".join(rows)
+
+
+def _hint(r) -> str:
+    b = r["bottleneck"]
+    kind = r.get("kind", "")
+    if b == "memory":
+        if kind == "decode":
+            return ("cache traffic dominates: quantize KV cache / shard "
+                    "deeper / batch more requests per step")
+        return ("fuse elementwise chains + bf16 intermediates; on TPU the "
+                "flash/ssm Pallas kernels keep these tiles in VMEM")
+    if b == "collective":
+        return ("overlap param all-gathers with compute; shrink TP degree "
+                "or switch collectives to bf16")
+    return "increase per-device batch or arithmetic intensity"
+
+
+def main():
+    recs = load()
+    ok = sum(1 for r in recs.values() if r.get("ok"))
+    out = [
+        "<!-- AUTO-GENERATED dry-run/roofline tables "
+        "(scripts/make_experiments.py) -->",
+        f"\n### Dry-run status: {ok}/{len(recs)} compiled cells\n",
+        dryrun_table(recs),
+        "\n### Single-pod roofline baselines (16x16, 256 chips)\n",
+        roofline_table(recs),
+    ]
+    path = os.path.join(RESULTS, "tables.md")
+    with open(path, "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote {path} ({ok} ok cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Perf hillclimbing harness: re-lower one cell with config overrides
+and report the three roofline terms, so each hypothesis→change→measure
+iteration is one command.
+
+    PYTHONPATH=src python scripts/perf_iter.py --arch qwen1.5-110b \
+        --shape train_4k --set attn_chunk=2048 --set logit_chunk=2048 \
+        --tag h2_bigger_chunks
+
+Results append to results/perf_iters.jsonl.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return k, v == "true"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig field override, e.g. attn_chunk=2048; "
+                         "ssm.* fields via ssm.chunk=256")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--full-memory", action="store_true",
+                    help="also run the full-depth compile for "
+                         "memory_analysis (slower)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.dryrun import estimate_cost, _depth_config
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.models.common import SHAPES
+    from repro.roofline import roofline_from_numbers, roofline_terms
+
+    cfg = get_config(args.arch)
+    ssm_over = {}
+    for s in args.set:
+        k, v = parse_override(s)
+        if k.startswith("ssm."):
+            ssm_over[k[4:]] = v
+        else:
+            cfg = dataclasses.replace(cfg, **{k: v})
+    if ssm_over:
+        cfg = dataclasses.replace(cfg,
+                                  ssm=dataclasses.replace(cfg.ssm, **ssm_over))
+
+    mesh = make_production_mesh()
+    t0 = time.time()
+    numbers = estimate_cost(args.arch, args.shape, mesh, cfg)
+    roof = roofline_from_numbers(
+        numbers, arch=args.arch, shape_name=args.shape, mesh_name="16x16",
+        n_devices=mesh.size, cfg=cfg, shape=SHAPES[args.shape],
+        note=f"perf_iter tag={args.tag}")
+    rec = roof.to_dict()
+    rec["tag"] = args.tag
+    rec["overrides"] = args.set
+    rec["wall_seconds"] = time.time() - t0
+    if args.full_memory:
+        cell = build_cell(args.arch, args.shape, mesh, cfg=cfg)
+        compiled = lower_cell(cell, mesh).compile()
+        ma = compiled.memory_analysis()
+        rec["bytes_per_dev_argument"] = float(ma.argument_size_in_bytes)
+        rec["bytes_per_dev_temp"] = float(ma.temp_size_in_bytes)
+    print(roofline_terms(roof))
+    print(f"  coll detail: {numbers['coll']['by_op']}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_iters.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

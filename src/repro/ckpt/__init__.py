@@ -1,0 +1,6 @@
+from .io import get_bytes, put_bytes, delete_path
+from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+from .replicate import replicate_checkpoint
+
+__all__ = ["get_bytes", "put_bytes", "delete_path", "CheckpointManager",
+           "save_checkpoint", "restore_checkpoint", "replicate_checkpoint"]

@@ -1,0 +1,23 @@
+"""Connector implementations (paper §4): POSIX + six emulated cloud
+storage services (AWS-S3, Wasabi, Google-Cloud, Google-Drive, Box, Ceph)
+plus an in-memory store for tests."""
+
+from .posix import PosixConnector
+from .memory import MemoryConnector
+from .cloud import (
+    CloudStorage,
+    ObjectStoreConnector,
+    NativeClient,
+    make_cloud,
+    PROFILES,
+)
+
+__all__ = [
+    "PosixConnector",
+    "MemoryConnector",
+    "CloudStorage",
+    "ObjectStoreConnector",
+    "NativeClient",
+    "make_cloud",
+    "PROFILES",
+]

@@ -1,0 +1,406 @@
+"""Emulated cloud object stores + their Connectors (paper §4-§6).
+
+The container is offline, so each provider (AWS-S3, Wasabi, Google-Cloud,
+Google-Drive, Box, Ceph) is emulated as a :class:`CloudStorage` service:
+a blob namespace fronted by a native API whose calls cost request
+round-trips, payload transmission on a network link, API-processing
+latency, and call-quota tokens (Drive/Box throttle, paper §4).  All
+constants are *model seconds* scaled by ``REPRO_TIME_SCALE``
+(see ``repro.core.clock``).
+
+Two access paths exist, matching the paper's experiment design:
+
+* :class:`NativeClient` — the two-party baseline ("boto3"), running at
+  the science institution, calling the native API over the WAN.
+* :class:`ObjectStoreConnector` — the Connector, deployed either
+  ``placement="local"`` (institution DTN, native API over WAN — Fig. 4)
+  or ``placement="cloud"`` (VM next to the storage, native API over LAN,
+  GridFTP handles the WAN hop — Fig. 5).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+
+from ..core.clock import Clock, DEFAULT_CLOCK, Link, TokenBucket
+from ..core.connector import AppChannel, Connector, Credential, Session, StatInfo
+from ..core.errors import AuthError, FaultInjected, NotFound, RateLimitError
+from .memory import BlobDict
+
+MB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class StorageProfile:
+    """Per-provider native-API characteristics (model units)."""
+
+    provider: str
+    api_latency: float          # service-side processing per call (s)
+    put_calls: int              # control round-trips per object PUT
+    get_calls: int              # control round-trips per object GET
+    quota_rate: float           # API calls per second (token bucket)
+    quota_burst: float
+    intra_bw: float             # service-internal per-object-stream cap (B/s)
+    native_put_streams: int = 1  # native SDK internal parallelism (multipart)
+    native_get_streams: int = 1
+    credential_scheme: str = "s3-keypair"
+    consistency_delay: float = 0.0  # eventual visibility of fresh objects
+
+
+#: §4's six providers.  Constants chosen so the *relative* behaviour
+#: matches the paper's measurements (Figs. 6-17): S3-family APIs are
+#: fast w/ generous quotas; Drive/Box have high per-call latency and
+#: tight call quotas; Ceph is institution-grade (low latency).
+PROFILES: dict[str, StorageProfile] = {
+    "s3": StorageProfile("s3", api_latency=0.020, put_calls=2, get_calls=1,
+                         quota_rate=1000, quota_burst=2000, intra_bw=300 * MB,
+                         native_put_streams=4, native_get_streams=2),
+    "wasabi": StorageProfile("wasabi", api_latency=0.035, put_calls=2, get_calls=1,
+                             quota_rate=500, quota_burst=1000, intra_bw=220 * MB,
+                             native_put_streams=2, native_get_streams=2),
+    "gcs": StorageProfile("gcs", api_latency=0.025, put_calls=2, get_calls=1,
+                          quota_rate=1000, quota_burst=2000, intra_bw=280 * MB,
+                          native_put_streams=2, native_get_streams=2,
+                          credential_scheme="oauth2-token"),
+    "drive": StorageProfile("drive", api_latency=0.180, put_calls=3, get_calls=2,
+                            quota_rate=10, quota_burst=25, intra_bw=25 * MB,
+                            credential_scheme="oauth2-token",
+                            consistency_delay=0.5),
+    "box": StorageProfile("box", api_latency=0.140, put_calls=3, get_calls=2,
+                          quota_rate=16, quota_burst=32, intra_bw=30 * MB,
+                          credential_scheme="oauth2-token",
+                          consistency_delay=0.5),
+    "ceph": StorageProfile("ceph", api_latency=0.004, put_calls=2, get_calls=1,
+                           quota_rate=5000, quota_burst=10000, intra_bw=400 * MB),
+}
+
+
+def wan_link(clock: Clock | None = None) -> Link:
+    """Institution <-> cloud WAN (iperf-calibrated vs paper §6: ~4-7
+    Gbps aggregate, single TCP stream ~40 MB/s)."""
+    return Link("wan", rtt=0.030, per_stream_bw=40 * MB, aggregate_bw=600 * MB,
+                clock=clock or DEFAULT_CLOCK)
+
+
+def lan_link(clock: Clock | None = None) -> Link:
+    """In-cloud VM <-> storage frontend."""
+    return Link("lan", rtt=0.001, per_stream_bw=300 * MB, aggregate_bw=2500 * MB,
+                clock=clock or DEFAULT_CLOCK)
+
+
+class CloudStorage:
+    """The provider-side service: blobs + native API semantics."""
+
+    def __init__(self, profile: StorageProfile, clock: Clock | None = None,
+                 fault_plan=None):
+        self.profile = profile
+        self.clock = clock or DEFAULT_CLOCK
+        self.blobs = BlobDict()
+        self.quota = TokenBucket(profile.quota_rate, profile.quota_burst, self.clock)
+        self.fault_plan = fault_plan  # callable(op_name, index) -> bool(fail?)
+        self._op_index = 0
+        self._fresh: dict[str, float] = {}  # key -> visible-at (virtual s)
+        self._lock = threading.Lock()
+
+    # -- plumbing ---------------------------------------------------------
+    def _admit(self, op: str, calls: int, link: Link) -> None:
+        with self._lock:
+            self._op_index += 1
+            idx = self._op_index
+        if self.fault_plan is not None and self.fault_plan(op, idx):
+            raise FaultInjected(f"{self.profile.provider}:{op}#{idx}")
+        wait = self.quota.try_acquire(calls)
+        if wait > 0:
+            raise RateLimitError(
+                f"{self.profile.provider} API quota exceeded", retry_after=wait)
+        link.round_trip(calls)
+        self.clock.sleep(self.profile.api_latency * calls)
+
+    def _mark_fresh(self, key: str) -> None:
+        if self.profile.consistency_delay > 0:
+            with self._lock:
+                self._fresh[key] = (self.clock.virtual_elapsed
+                                    + self.profile.consistency_delay)
+
+    def _visible(self, key: str) -> bool:
+        if self.profile.consistency_delay <= 0:
+            return True
+        with self._lock:
+            t = self._fresh.get(key)
+            if t is None or self.clock.virtual_elapsed >= t:
+                self._fresh.pop(key, None)
+                return True
+            return False
+
+    def _payload(self, link: Link, nbytes: int, streams: int) -> None:
+        # Payload pays the slower of the network hop and the service's
+        # internal media bandwidth.
+        if nbytes <= 0:
+            return
+        link.transmit(nbytes, streams=streams)
+        self.clock.sleep(nbytes / self.profile.intra_bw)
+
+    # -- native API (boto3-ish) --------------------------------------------
+    def api_put(self, key: str, data: bytes, link: Link, streams: int = 1) -> None:
+        self._admit("put", self.profile.put_calls, link)
+        self._payload(link, len(data), streams)
+        self.blobs.put(key, data)
+        self._mark_fresh(key)
+
+    def api_put_range(self, key: str, offset: int, data: bytes, link: Link,
+                      streams: int = 1) -> None:
+        """One part of a multipart upload (1 call per part)."""
+        self._admit("put_part", 1, link)
+        self._payload(link, len(data), streams)
+        self.blobs.put_range(key, offset, data)
+        self._mark_fresh(key)
+
+    def api_complete_multipart(self, key: str, link: Link) -> None:
+        self._admit("complete", 1, link)
+
+    def api_get(self, key: str, link: Link, offset: int = 0,
+                length: int | None = None, streams: int = 1) -> bytes:
+        self._admit("get", self.profile.get_calls, link)
+        if not self.blobs.exists(key):
+            raise NotFound(key)
+        size = self.blobs.size(key)
+        if length is None:
+            length = size - offset
+        data = self.blobs.get_range(key, offset, min(length, max(0, size - offset)))
+        self._payload(link, len(data), streams)
+        return data
+
+    def api_stat(self, key: str, link: Link) -> StatInfo:
+        self._admit("stat", 1, link)
+        if self.blobs.exists(key) and self._visible(key):
+            return StatInfo(name=key, size=self.blobs.size(key),
+                            mtime=self.blobs.mtime(key))
+        objs, dirs = self.blobs.list_prefix(key)
+        if objs or dirs or key == "":
+            return StatInfo(name=key, size=0, mtime=0.0, is_dir=True)
+        raise NotFound(key)
+
+    def api_list(self, prefix: str, link: Link) -> tuple[list[str], list[str]]:
+        self._admit("list", 1, link)
+        objs, dirs = self.blobs.list_prefix(prefix)
+        return [k for k in objs if self._visible(k)], dirs
+
+    def api_delete(self, key: str, link: Link) -> None:
+        self._admit("delete", 1, link)
+        self.blobs.delete(key)
+
+    def api_checksum(self, key: str, link: Link, algorithm: str) -> str:
+        """Server-side checksum (beyond-paper optimization; real stores
+        expose ETag/x-goog-hash/GetObjectAttributes).  Costs one control
+        round-trip + a service-internal read — NO egress re-read, which
+        is the §7/§8.2 integrity tax this eliminates."""
+        self._admit("checksum", 1, link)
+        data = self.blobs.get(key)
+        self.clock.sleep(len(data) / self.profile.intra_bw)
+        from ..core.integrity import hasher
+        h = hasher(algorithm)
+        h.update(data)
+        return h.hexdigest()
+
+
+def make_cloud(provider: str, clock: Clock | None = None, **overrides) -> CloudStorage:
+    prof = PROFILES[provider]
+    if overrides:
+        prof = replace(prof, **overrides)
+    return CloudStorage(prof, clock=clock)
+
+
+class ObjectStoreConnector(Connector):
+    """Connector over a :class:`CloudStorage` native API (paper §4).
+
+    ``placement="local"``: runs on an institution DTN; every API call
+    crosses the WAN (Fig. 4).  ``placement="cloud"``: runs on a VM next
+    to the storage; API calls are LAN-local and the WAN hop is handled
+    by the GridFTP data channel (Fig. 5).
+    """
+
+    def __init__(self, storage: CloudStorage, placement: str = "local",
+                 clock: Clock | None = None, part_size: int = 8 * MB,
+                 server_checksum: bool = False):
+        self.storage = storage
+        self.placement = placement
+        self.clock = clock or storage.clock
+        self.part_size = part_size
+        self.server_checksum = server_checksum
+        self.name = f"{storage.profile.provider}-conn-{placement}"
+        self.credential_scheme = storage.profile.credential_scheme
+        self.access_link = (lan_link(self.clock) if placement == "cloud"
+                            else wan_link(self.clock))
+
+    def checksum(self, session: Session, path: str, algorithm: str) -> str:
+        if self.server_checksum:
+            session.check()
+            return self.storage.api_checksum(self._key(path),
+                                             self.access_link, algorithm)
+        return super().checksum(session, path, algorithm)
+
+    # -- auth (paper Fig. 3) ----------------------------------------------
+    def set_credential(self, session: Session, credential: Credential | None) -> None:
+        if credential is None or credential.scheme != self.credential_scheme:
+            raise AuthError(
+                f"{self.name} requires credential scheme "
+                f"{self.credential_scheme!r}, got "
+                f"{credential.scheme if credential else None!r}")
+        session.credential = credential
+
+    @staticmethod
+    def _key(path: str) -> str:
+        return path.strip("/")
+
+    # -- metadata ----------------------------------------------------------
+    def stat(self, session: Session, path: str) -> StatInfo:
+        session.check()
+        return self.storage.api_stat(self._key(path), self.access_link)
+
+    def listdir(self, session: Session, path: str):
+        session.check()
+        objs, dirs = self.storage.api_list(self._key(path), self.access_link)
+        out = [StatInfo(name=k, size=self.storage.blobs.size(k),
+                        mtime=self.storage.blobs.mtime(k)) for k in objs]
+        out += [StatInfo(name=d, size=0, mtime=0.0, is_dir=True) for d in dirs]
+        return out
+
+    def command(self, session: Session, op: str, path: str, **kw) -> None:
+        session.check()
+        key = self._key(path)
+        if op == "mkdir":
+            return
+        if op == "delete":
+            self.storage.api_delete(key, self.access_link)
+        elif op == "rename":
+            to = self._key(kw["to"])
+            if self.storage.blobs.exists(key):
+                data = self.storage.api_get(key, self.access_link)
+                self.storage.api_put(to, data, self.access_link)
+                self.storage.api_delete(key, self.access_link)
+                return
+            # prefix rename = server-side copy per object (no data move
+            # through the connector; one API call each)
+            objs = [k for k in self.storage.blobs.keys()
+                    if k.startswith(key + "/")]
+            if not objs:
+                raise NotFound(path)
+            for k in objs:
+                self._admit_copy()
+                self.storage.blobs.put(to + k[len(key):],
+                                       self.storage.blobs.get(k))
+                self.storage.blobs.delete(k)
+        else:
+            raise NotFound(op)
+
+    def _admit_copy(self) -> None:
+        """Server-side COPY: control-plane cost only."""
+        self.storage._admit("copy", 1, self.access_link)
+
+    # -- data ----------------------------------------------------------------
+    def send(self, session: Session, path: str, channel: AppChannel) -> None:
+        session.check()
+        key = self._key(path)
+        size = self.storage.api_stat(key, self.access_link).size
+        if hasattr(channel, "set_size"):
+            channel.set_size(size)
+        err: list[Exception] = []
+
+        def worker() -> None:
+            try:
+                while not err:
+                    rng = channel.get_read_range()
+                    if rng is None or rng.offset >= size:
+                        return
+                    length = min(rng.length, size - rng.offset)
+                    data = self.storage.api_get(key, self.access_link,
+                                                offset=rng.offset, length=length)
+                    channel.write(rng.offset, data)
+            except Exception as e:
+                err.append(e)
+
+        self._pool(channel, worker)
+        channel.finished(err[0] if err else None)
+        if err:
+            raise err[0]
+
+    def recv(self, session: Session, path: str, channel: AppChannel) -> None:
+        session.check()
+        key = self._key(path)
+        err: list[Exception] = []
+        wrote = [False]
+
+        def worker() -> None:
+            try:
+                while not err:
+                    rng = channel.get_read_range()
+                    if rng is None:
+                        return
+                    done = 0
+                    while done < rng.length:
+                        step = min(self.part_size, rng.length - done)
+                        data = channel.read(rng.offset + done, step)
+                        if not data:
+                            return
+                        # parts may land out of order -> multipart semantics
+                        self.storage.api_put_range(key, rng.offset + done,
+                                                   data, self.access_link)
+                        wrote[0] = True
+                        channel.bytes_written(rng.offset + done, len(data))
+                        done += len(data)
+            except Exception as e:
+                err.append(e)
+                try:  # wake sibling streams blocked on the channel
+                    channel.finished(e)
+                except Exception:
+                    pass
+
+        self._pool(channel, worker)
+        if wrote[0] and not err:
+            self.storage.api_complete_multipart(key, self.access_link)
+        channel.finished(err[0] if err else None)
+        if err:
+            raise err[0]
+
+    def _pool(self, channel: AppChannel, worker) -> None:
+        cc = max(1, channel.get_concurrency())
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+
+class NativeClient:
+    """Two-party baseline: the user's own machine driving the provider
+    SDK over the WAN (boto3/gsutil/Box SDK in the paper §5-§6)."""
+
+    def __init__(self, storage: CloudStorage, clock: Clock | None = None,
+                 startup_cost: float = 0.15):
+        self.storage = storage
+        self.clock = clock or storage.clock
+        self.link = wan_link(self.clock)
+        self.startup_cost = startup_cost  # login/session setup (paper §5.4)
+
+    def login(self) -> None:
+        self.clock.sleep(self.startup_cost)
+
+    def upload_file(self, local_path: str, key: str) -> None:
+        with open(local_path, "rb") as f:
+            data = f.read()
+        self.storage.api_put(key, data, self.link,
+                             streams=self.storage.profile.native_put_streams)
+
+    def upload_bytes(self, data: bytes, key: str) -> None:
+        self.storage.api_put(key, data, self.link,
+                             streams=self.storage.profile.native_put_streams)
+
+    def download_bytes(self, key: str) -> bytes:
+        return self.storage.api_get(
+            key, self.link, streams=self.storage.profile.native_get_streams)
+
+    def download_file(self, key: str, local_path: str) -> None:
+        data = self.download_bytes(key)
+        with open(local_path, "wb") as f:
+            f.write(data)

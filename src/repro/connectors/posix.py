@@ -1,0 +1,177 @@
+"""POSIX Connector — the paper's first and reference implementation
+(Fig. 2).  Translates the Connector interface onto open/read/write/stat
+against a real filesystem subtree."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+
+from ..core.connector import AppChannel, ByteRange, Connector, Session, StatInfo
+from ..core.errors import NotFound, PermanentError
+
+
+class PosixConnector(Connector):
+    name = "posix"
+    credential_scheme = "local-user"
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- path safety -----------------------------------------------------
+    def _abs(self, path: str) -> str:
+        p = os.path.abspath(os.path.join(self.root, path.lstrip("/")))
+        if not (p == self.root or p.startswith(self.root + os.sep)):
+            raise PermanentError(f"path escapes connector root: {path}")
+        return p
+
+    def _rel(self, abspath: str) -> str:
+        return os.path.relpath(abspath, self.root)
+
+    # -- metadata --------------------------------------------------------
+    def stat(self, session: Session, path: str) -> StatInfo:
+        session.check()
+        p = self._abs(path)
+        try:
+            st = os.stat(p)
+        except FileNotFoundError:
+            raise NotFound(path) from None
+        return StatInfo(
+            name=path,
+            size=st.st_size,
+            mtime=st.st_mtime,
+            is_dir=os.path.isdir(p),
+            mode=st.st_mode & 0o777,
+            nlink=st.st_nlink,
+            uid=st.st_uid,
+            gid=st.st_gid,
+        )
+
+    def listdir(self, session: Session, path: str):
+        session.check()
+        p = self._abs(path)
+        if not os.path.isdir(p):
+            raise NotFound(path)
+        out = []
+        for entry in sorted(os.listdir(p)):
+            child = os.path.join(p, entry)
+            st = os.stat(child)
+            out.append(
+                StatInfo(
+                    name=os.path.join(path, entry) if path not in (".", "") else entry,
+                    size=st.st_size,
+                    mtime=st.st_mtime,
+                    is_dir=os.path.isdir(child),
+                    mode=st.st_mode & 0o777,
+                )
+            )
+        return out
+
+    def command(self, session: Session, op: str, path: str, **kw) -> None:
+        session.check()
+        p = self._abs(path)
+        if op == "mkdir":
+            os.makedirs(p, exist_ok=True)
+        elif op == "delete":
+            if os.path.isdir(p):
+                shutil.rmtree(p)
+            elif os.path.exists(p):
+                os.remove(p)
+            else:
+                raise NotFound(path)
+        elif op == "rename":
+            dst = self._abs(kw["to"])
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            os.replace(p, dst)
+        elif op == "chmod":
+            os.chmod(p, kw["mode"])
+        else:
+            raise PermanentError(f"unknown command {op!r}")
+
+    # -- data ------------------------------------------------------------
+    def send(self, session: Session, path: str, channel: AppChannel) -> None:
+        session.check()
+        p = self._abs(path)
+        try:
+            size = os.path.getsize(p)
+        except OSError:
+            raise NotFound(path) from None
+        if hasattr(channel, "set_size"):
+            channel.set_size(size)
+        cc = max(1, channel.get_concurrency())
+        err: list[Exception] = []
+
+        def worker() -> None:
+            try:
+                with open(p, "rb") as f:
+                    while True:
+                        rng = channel.get_read_range()
+                        if rng is None or rng.offset >= size:
+                            return
+                        length = min(rng.length, size - rng.offset)
+                        f.seek(rng.offset)
+                        data = f.read(length)
+                        channel.write(rng.offset, data)
+            except Exception as e:  # pragma: no cover - surfaced below
+                err.append(e)
+
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        channel.finished(err[0] if err else None)
+        if err:
+            raise err[0]
+
+    def recv(self, session: Session, path: str, channel: AppChannel) -> None:
+        session.check()
+        p = self._abs(path)
+        os.makedirs(os.path.dirname(p) or self.root, exist_ok=True)
+        bs = channel.get_blocksize()
+        lock = threading.Lock()
+        err: list[Exception] = []
+        # Pre-create / truncate once, then positional writes (supports
+        # out-of-order + holey restart writes).
+        with open(p, "ab"):
+            pass
+        f = open(p, "r+b")
+
+        def worker() -> None:
+            try:
+                while True:
+                    rng = channel.get_read_range()
+                    if rng is None:
+                        return
+                    done = 0
+                    while done < rng.length:
+                        step = min(bs, rng.length - done)
+                        data = channel.read(rng.offset + done, step)
+                        if not data:
+                            return
+                        with lock:
+                            f.seek(rng.offset + done)
+                            f.write(data)
+                        channel.bytes_written(rng.offset + done, len(data))
+                        done += len(data)
+            except Exception as e:
+                err.append(e)
+                try:  # wake sibling streams blocked on the channel
+                    channel.finished(e)
+                except Exception:
+                    pass
+
+        cc = max(1, channel.get_concurrency())
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        f.flush()
+        os.fsync(f.fileno())
+        f.close()
+        channel.finished(err[0] if err else None)
+        if err:
+            raise err[0]

@@ -1,0 +1,28 @@
+# The paper's primary contribution: the Connector storage abstraction
+# (connector.py), the managed third-party transfer service (transfer.py),
+# end-to-end integrity checking (integrity.py), and the performance-
+# model-based evaluation method (perfmodel.py).
+
+from .connector import (AppChannel, ByteRange, Connector, Credential,
+                        Session, StatInfo, iter_files)
+from .errors import (AuthError, ConnectorError, FaultInjected, IntegrityError,
+                     NotFound, PermanentError, RateLimitError, TransientError)
+from .transfer import (CredentialStore, Endpoint, TransferOptions,
+                       TransferService, TransferTask)
+from .perfmodel import (Advisor, PerfModel, Route, fit_linear, fit_perf_model,
+                        fit_startup_cost, pearson)
+from .integrity import checksum_bytes, hasher
+from .clock import Clock, Link, TokenBucket, loopback
+
+__all__ = [
+    "AppChannel", "ByteRange", "Connector", "Credential", "Session",
+    "StatInfo", "iter_files",
+    "AuthError", "ConnectorError", "FaultInjected", "IntegrityError",
+    "NotFound", "PermanentError", "RateLimitError", "TransientError",
+    "CredentialStore", "Endpoint", "TransferOptions", "TransferService",
+    "TransferTask",
+    "Advisor", "PerfModel", "Route", "fit_linear", "fit_perf_model",
+    "fit_startup_cost", "pearson",
+    "checksum_bytes", "hasher",
+    "Clock", "Link", "TokenBucket", "loopback",
+]

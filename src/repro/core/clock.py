@@ -1,0 +1,169 @@
+"""Scaled clock + emulated network links.
+
+This container is offline, so the WAN/cloud environment of the paper is
+emulated deterministically: every latency/bandwidth constant is expressed
+in *model seconds* and multiplied by a global ``time_scale`` before any
+real sleep happens.  ``time_scale=0`` turns all waits into pure
+accounting (used by unit tests); benchmarks use a small positive scale so
+that measured wall-clock times are dominated by the modeled terms.
+
+The link model reproduces the phenomena the paper measures:
+
+* per-API-call round-trip latency  -> per-file overhead ``t0`` (Eq. 4)
+* per-stream vs aggregate bandwidth -> throughput-vs-concurrency curves
+  (Figs. 13-17): rate = min(per_stream, aggregate / active_streams)
+* local contention                  -> slight decline past saturation
+  ("aggregated throughput first increases ... and eventually drops
+  slowly, because of local contention", §6)
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+def _env_scale() -> float:
+    return float(os.environ.get("REPRO_TIME_SCALE", "0.0"))
+
+
+class Clock:
+    """Monotonic clock whose sleeps are scaled; also keeps *virtual*
+    elapsed accounting so tests with scale=0 can still assert on modeled
+    time.
+
+    Sub-millisecond scaled sleeps are batched per thread (a "sleep
+    debt") so emulation fidelity survives small scales — Python's
+    ``time.sleep`` has ~0.1 ms of overhead that would otherwise swamp
+    the modeled latencies.
+    """
+
+    MIN_REAL_SLEEP = 1e-3
+
+    def __init__(self, scale: float | None = None):
+        self.scale = _env_scale() if scale is None else scale
+        self._virtual = 0.0
+        self._lock = threading.Lock()
+        self._debt = threading.local()
+
+    def sleep(self, model_seconds: float) -> None:
+        if model_seconds <= 0:
+            return
+        with self._lock:
+            self._virtual += model_seconds
+        if self.scale <= 0:
+            return
+        real = model_seconds * self.scale
+        debt = getattr(self._debt, "v", 0.0) + real
+        if debt >= self.MIN_REAL_SLEEP:
+            self._debt.v = 0.0
+            time.sleep(debt)
+        else:
+            self._debt.v = debt
+
+    @property
+    def virtual_elapsed(self) -> float:
+        return self._virtual
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+DEFAULT_CLOCK = Clock()
+
+
+@dataclass
+class TokenBucket:
+    """API call-quota model (Google Drive / Box, paper §4).
+
+    ``rate`` calls per model-second, burst ``capacity``.  When empty,
+    raises through the caller as a RateLimitError with a retry hint.
+    """
+
+    rate: float
+    capacity: float
+    clock: Clock = field(default_factory=lambda: DEFAULT_CLOCK)
+
+    def __post_init__(self):
+        self._tokens = self.capacity
+        self._last = time.monotonic()
+        self._vlast = 0.0
+        self._lock = threading.Lock()
+
+    def try_acquire(self, n: float = 1.0) -> float:
+        """Returns 0.0 on success, else model-seconds to wait."""
+        with self._lock:
+            now = time.monotonic()
+            if self.clock.scale > 0:
+                elapsed_model = (now - self._last) / self.clock.scale
+            else:
+                # Pure-accounting mode: refill from virtual clock.
+                elapsed_model = self.clock.virtual_elapsed - self._vlast
+            self._last = now
+            self._vlast = self.clock.virtual_elapsed
+            self._tokens = min(self.capacity, self._tokens + elapsed_model * self.rate)
+            if self._tokens >= n:
+                self._tokens -= n
+                return 0.0
+            return (n - self._tokens) / self.rate
+
+
+@dataclass
+class Link:
+    """A network hop.  Bandwidths in model-bytes per model-second.
+
+    ``transmit`` charges time in chunks so the effective per-stream rate
+    reacts to how many streams are concurrently active (the paper's
+    concurrency behaviour).
+    """
+
+    name: str
+    rtt: float  # model seconds, one round trip
+    per_stream_bw: float  # B/s a single TCP stream can carry
+    aggregate_bw: float  # B/s the whole link can carry
+    contention: float = 0.015  # fractional agg-bw loss per stream past knee
+    chunk: int = 1 << 21
+    clock: Clock = field(default_factory=lambda: DEFAULT_CLOCK)
+
+    def __post_init__(self):
+        self._active = 0
+        self._lock = threading.Lock()
+
+    def round_trip(self, n: int = 1) -> None:
+        self.clock.sleep(self.rtt * n)
+
+    def _per_stream_rate(self) -> float:
+        with self._lock:
+            act = max(1, self._active)
+        knee = max(1.0, self.aggregate_bw / self.per_stream_bw)
+        agg = self.aggregate_bw
+        if act > knee:
+            agg *= max(0.3, 1.0 - self.contention * (act - knee))
+        return min(self.per_stream_bw, agg / act)
+
+    def transmit(self, nbytes: int, streams: int = 1) -> None:
+        """Move ``nbytes`` using ``streams`` parallel TCP streams (the
+        GridFTP parallelism / SDK multipart knob).  Fair-shares the
+        aggregate among all active streams on the link."""
+        if nbytes <= 0:
+            return
+        streams = max(1, streams)
+        with self._lock:
+            self._active += streams
+        try:
+            left = nbytes
+            while left > 0:
+                step = min(left, self.chunk * streams)
+                self.clock.sleep(step / (streams * self._per_stream_rate()))
+                left -= step
+        finally:
+            with self._lock:
+                self._active -= streams
+
+
+#: A zero-cost link (co-located processes).
+def loopback(clock: Clock | None = None) -> Link:
+    return Link("loopback", rtt=0.0, per_stream_bw=float("inf"),
+                aggregate_bw=float("inf"), clock=clock or DEFAULT_CLOCK)

@@ -1,0 +1,56 @@
+"""Error taxonomy for the Connector data interface.
+
+The paper (§2.2, §4) distinguishes transient storage-API failures (rate
+limits / call quotas on Google Drive and Box, flaky WAN links) that the
+managed transfer service must retry automatically, from permanent errors
+(missing object, bad credential) that must surface to the client on the
+control channel.
+"""
+
+from __future__ import annotations
+
+
+class ConnectorError(Exception):
+    """Base class for all connector-layer errors."""
+
+
+class PermanentError(ConnectorError):
+    """Non-retryable: surfaced to the control channel immediately."""
+
+
+class TransientError(ConnectorError):
+    """Retryable: the transfer service retries with backoff (paper §4,
+    'automatic retries and fault-tolerant capabilities')."""
+
+    def __init__(self, msg: str = "", retry_after: float = 0.0):
+        super().__init__(msg)
+        self.retry_after = retry_after
+
+
+class RateLimitError(TransientError):
+    """Storage API call-quota exceeded (Google Drive / Box, paper §4)."""
+
+
+class FaultInjected(TransientError):
+    """Deterministic fault injected by a test/benchmark profile."""
+
+
+class NotFound(PermanentError):
+    pass
+
+
+class AlreadyExists(PermanentError):
+    pass
+
+
+class AuthError(PermanentError):
+    """Credential missing/invalid (paper Fig. 3 auth flow)."""
+
+
+class IntegrityError(ConnectorError):
+    """End-to-end checksum mismatch (paper §7). Retryable at file scope:
+    the transfer service re-sends the file a bounded number of times."""
+
+
+class SessionClosed(PermanentError):
+    pass

@@ -1,0 +1,700 @@
+"""Managed third-party transfer service (paper §2.1-§2.2, §4).
+
+The service plays the role Globus plays for Connector endpoints: a
+*client* submits a transfer between two endpoints and walks away
+("fire-and-forget"); the service
+
+  * expands directories and tracks per-file progress (paper §2.2),
+  * drives ``concurrency`` files in flight, each with ``parallelism``
+    outstanding block streams on the DTN<->DTN data channel,
+  * persists restart markers so a killed transfer resumes byte-exact
+    (holey transfers, paper §3 ``get_read_range``),
+  * retries transient faults (API quotas, flaky links) with backoff,
+  * optionally enforces end-to-end integrity: checksum at source during
+    streaming, re-read + checksum at destination after write (paper §7),
+  * never puts the client in the data path (third-party semantics).
+
+The data channel between the two connectors' DTNs is an emulated link
+chosen from their locations: same location -> loopback, otherwise the
+WAN (where GridFTP's parallel streams and out-of-order blocks are what
+the paper credits for Conn-cloud's wins, §6.2).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+
+from .clock import Clock, DEFAULT_CLOCK, Link, loopback
+from .connector import (AppChannel, ByteRange, Connector, Credential, Session,
+                        iter_files)
+from .errors import IntegrityError, TransientError
+from .integrity import hasher
+
+MB = 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# credential management (paper Fig. 3: the GCS-manager role)
+# --------------------------------------------------------------------------
+class CredentialStore:
+    """Credentials are registered out-of-band, keyed by endpoint; the
+    transfer service only ever handles the *reference* (paper: "The
+    credentials are never sent via the hosted Globus transfer
+    service")."""
+
+    def __init__(self):
+        self._creds: dict[str, Credential] = {}
+
+    def register(self, endpoint_id: str, cred: Credential) -> None:
+        self._creds[endpoint_id] = cred
+
+    def lookup(self, endpoint_id: str) -> Credential | None:
+        return self._creds.get(endpoint_id)
+
+
+@dataclass(frozen=True)
+class Endpoint:
+    """A (connector, base path) pair, as registered with the service."""
+
+    connector: Connector
+    path: str
+    endpoint_id: str = ""
+
+    def resolved_id(self) -> str:
+        return self.endpoint_id or self.connector.name
+
+
+# --------------------------------------------------------------------------
+# options / task bookkeeping
+# --------------------------------------------------------------------------
+@dataclass
+class TransferOptions:
+    concurrency: int = 4            # files in flight (paper "cc")
+    parallelism: int = 4            # streams per file on the data channel
+    blocksize: int = 4 * MB
+    integrity: bool = False         # paper §7 strong integrity checking
+    checksum_algorithm: str = "sha256"
+    max_retries: int = 5
+    max_integrity_retries: int = 2
+    retry_backoff: float = 0.5      # model seconds, doubled per attempt
+    startup_cost: float = 2.3       # third-party coordination (paper §5.4)
+    file_pipeline_cost: float = 0.005  # pipelined per-file command cost
+    auto_tune: bool = False         # §8: probe concurrency upward
+    max_concurrency: int = 32
+    verify_sampling: float = 1.0    # fraction of files integrity-checked
+
+
+@dataclass
+class FileResult:
+    src: str
+    dst: str
+    size: int
+    attempts: int = 0
+    checksum: str | None = None
+    ok: bool = False
+    error: str | None = None
+
+
+@dataclass
+class TaskStats:
+    bytes_total: int = 0
+    bytes_done: int = 0
+    files_total: int = 0
+    files_done: int = 0
+    files_failed: int = 0
+    faults_retried: int = 0
+    integrity_failures: int = 0
+    wall_seconds: float = 0.0
+    effective_concurrency: float = 0.0
+
+
+class TransferTask:
+    """Control-channel handle the client polls (never in the data path)."""
+
+    PENDING, ACTIVE, SUCCEEDED, FAILED = "PENDING", "ACTIVE", "SUCCEEDED", "FAILED"
+
+    def __init__(self, task_id: str):
+        self.task_id = task_id
+        self.status = self.PENDING
+        self.stats = TaskStats()
+        self.files: list[FileResult] = []
+        self.events: list[tuple[float, str]] = []
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+        self._rate_samples: list[tuple[float, int]] = []
+
+    def log(self, msg: str) -> None:
+        with self._lock:
+            self.events.append((time.monotonic(), msg))
+
+    def _bytes_tick(self, n: int) -> None:
+        with self._lock:
+            self.stats.bytes_done += n
+            self._rate_samples.append((time.monotonic(), self.stats.bytes_done))
+            if len(self._rate_samples) > 4096:
+                del self._rate_samples[:2048]
+
+    def throughput(self, window: float = 2.0) -> float:
+        """Instantaneous B/s over the trailing window (perf markers)."""
+        with self._lock:
+            if len(self._rate_samples) < 2:
+                return 0.0
+            t1, b1 = self._rate_samples[-1]
+            for t0, b0 in reversed(self._rate_samples):
+                if t1 - t0 >= window:
+                    break
+            dt = max(1e-9, t1 - t0)
+            return (b1 - b0) / dt
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._done.wait(timeout)
+
+    def _finish(self, status: str) -> None:
+        self.status = status
+        self._done.set()
+
+
+# --------------------------------------------------------------------------
+# restart markers
+# --------------------------------------------------------------------------
+class MarkerStore:
+    """Persists per-file completed ranges so a killed service resumes
+    without re-sending bytes (paper §3 restart/'holey' transfers)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _path(self, task_id: str) -> str:
+        return os.path.join(self.root, f"{task_id}.marker.json")
+
+    def load(self, task_id: str) -> dict:
+        p = self._path(task_id)
+        if not os.path.exists(p):
+            return {"files": {}}
+        with open(p) as f:
+            return json.load(f)
+
+    def save(self, task_id: str, state: dict) -> None:
+        p = self._path(task_id)
+        tmp = p + ".tmp"
+        with self._lock:
+            with open(tmp, "w") as f:
+                json.dump(state, f)
+            os.replace(tmp, p)
+
+    def clear(self, task_id: str) -> None:
+        p = self._path(task_id)
+        if os.path.exists(p):
+            os.remove(p)
+
+
+def _merge_ranges(ranges: list[list[int]]) -> list[list[int]]:
+    out: list[list[int]] = []
+    for off, ln in sorted(ranges):
+        if out and off <= out[-1][0] + out[-1][1]:
+            end = max(out[-1][0] + out[-1][1], off + ln)
+            out[-1][1] = end - out[-1][0]
+        else:
+            out.append([off, ln])
+    return out
+
+
+def _holes(size: int, done: list[list[int]]) -> list[ByteRange]:
+    done = _merge_ranges(done)
+    holes, at = [], 0
+    for off, ln in done:
+        if off > at:
+            holes.append(ByteRange(at, off - at))
+        at = max(at, off + ln)
+    if at < size:
+        holes.append(ByteRange(at, size - at))
+    return holes
+
+
+# --------------------------------------------------------------------------
+# per-file data pipe (the GridFTP data channel between two DTNs)
+# --------------------------------------------------------------------------
+class _FilePipe:
+    """Joins src-connector Send and dst-connector Recv for one file.
+
+    The send side claims outstanding byte ranges (``parallelism`` in
+    flight), pays transmission on the DTN<->DTN link, and queues blocks;
+    the recv side consumes blocks (possibly out of order — storage
+    writes are positional) and acknowledges via ``bytes_written``.
+    """
+
+    def __init__(self, size: int, holes: list[ByteRange], link: Link,
+                 options: TransferOptions, on_written, checksum_alg: str | None):
+        self.size = size
+        self.link = link
+        self.opt = options
+        self.on_written = on_written
+        self._claims: list[ByteRange] = list(holes)
+        self._ready: dict[int, bytes] = {}
+        self._ready_order: list[int] = []
+        self._outstanding = 0
+        self._send_done = False
+        self._error: Exception | None = None
+        self._cv = threading.Condition()
+        # incremental source checksum (folds in claim order, §7)
+        self._hash = hasher(checksum_alg) if checksum_alg else None
+        self._fold_at = holes[0].offset if holes else 0
+        self._fold_pending: dict[int, bytes] = {}
+        self.send_channel = _SendSide(self)
+        self.recv_channel = _RecvSide(self)
+
+    # ---- send side ----
+    def claim(self) -> ByteRange | None:
+        with self._cv:
+            if self._error is not None:
+                return None
+            while self._claims:
+                rng = self._claims[0]
+                take = min(self.opt.blocksize, rng.length)
+                if take == rng.length:
+                    self._claims.pop(0)
+                else:
+                    self._claims[0] = ByteRange(rng.offset + take,
+                                                rng.length - take)
+                self._outstanding += 1
+                return ByteRange(rng.offset, take)
+            self._send_done = True
+            self._cv.notify_all()
+            return None
+
+    def push(self, offset: int, data: bytes) -> None:
+        # data-channel transmission happens OUTSIDE the lock; GridFTP's
+        # ``parallelism`` TCP streams are modeled as a rate multiplier
+        # (paper §2.2 / §6: parallel streams + out-of-order blocks)
+        self.link.transmit(len(data), streams=self.opt.parallelism)
+        with self._cv:
+            self._ready[offset] = data
+            self._ready_order.append(offset)
+            if self._hash is not None:
+                self._fold_pending[offset] = data
+                while self._fold_at in self._fold_pending:
+                    chunk = self._fold_pending.pop(self._fold_at)
+                    self._hash.update(chunk)
+                    self._fold_at += len(chunk)
+            self._cv.notify_all()
+
+    def fail(self, err: Exception) -> None:
+        with self._cv:
+            if self._error is None:
+                self._error = err
+            self._send_done = True
+            self._cv.notify_all()
+
+    # ---- recv side ----
+    def next_block_range(self) -> ByteRange | None:
+        with self._cv:
+            while True:
+                if self._error is not None:
+                    raise self._error
+                if self._ready_order:
+                    off = self._ready_order.pop(0)
+                    return ByteRange(off, len(self._ready[off]))
+                if self._send_done and self._outstanding == 0 and not self._ready:
+                    return None
+                self._cv.wait(timeout=10.0)
+
+    def take(self, offset: int, length: int) -> bytes:
+        with self._cv:
+            data = self._ready.pop(offset)
+            if length < len(data):  # partial consume: requeue remainder
+                self._ready[offset + length] = data[length:]
+                self._ready_order.insert(0, offset + length)
+                data = data[:length]
+            return data
+
+    def written(self, offset: int, length: int) -> None:
+        with self._cv:
+            self._outstanding -= 1
+            self._cv.notify_all()
+        self.on_written(offset, length)
+
+    def source_checksum(self) -> str | None:
+        return self._hash.hexdigest() if self._hash is not None else None
+
+
+class _SendSide(AppChannel):
+    def __init__(self, pipe: _FilePipe):
+        self.pipe = pipe
+
+    def set_size(self, size: int) -> None:
+        pass  # pipe already knows the stat size
+
+    def write(self, offset: int, data: bytes) -> None:
+        self.pipe.push(offset, data)
+
+    def read(self, offset: int, length: int) -> bytes:
+        raise NotImplementedError
+
+    def get_concurrency(self) -> int:
+        # stream parallelism is modeled at the link level (push);
+        # one claimer keeps modeled time deterministic
+        return 1
+
+    def get_blocksize(self) -> int:
+        return self.pipe.opt.blocksize
+
+    def get_read_range(self) -> ByteRange | None:
+        return self.pipe.claim()
+
+    def bytes_written(self, offset: int, length: int) -> None:
+        pass
+
+    def finished(self, error: Exception | None = None) -> None:
+        if error is not None:
+            self.pipe.fail(error)
+
+
+class _RecvSide(AppChannel):
+    def __init__(self, pipe: _FilePipe):
+        self.pipe = pipe
+
+    def write(self, offset: int, data: bytes) -> None:
+        raise NotImplementedError
+
+    def read(self, offset: int, length: int) -> bytes:
+        return self.pipe.take(offset, length)
+
+    def get_concurrency(self) -> int:
+        return 1  # see _SendSide.get_concurrency
+
+    def get_blocksize(self) -> int:
+        return self.pipe.opt.blocksize
+
+    def get_read_range(self) -> ByteRange | None:
+        return self.pipe.next_block_range()
+
+    def bytes_written(self, offset: int, length: int) -> None:
+        self.pipe.written(offset, length)
+
+    def finished(self, error: Exception | None = None) -> None:
+        if error is not None:
+            # a storage-write failure must wake every blocked stream,
+            # stop the send side claiming more ranges, and surface the
+            # error to the retry loop
+            self.pipe.fail(error)
+
+
+# --------------------------------------------------------------------------
+# the service
+# --------------------------------------------------------------------------
+def _location(connector: Connector) -> str:
+    return getattr(connector, "location", None) or _infer_location(connector)
+
+
+def _infer_location(connector: Connector) -> str:
+    placement = getattr(connector, "placement", None)
+    if placement == "cloud":
+        storage = getattr(connector, "storage", None)
+        provider = storage.profile.provider if storage is not None else "cloud"
+        return f"cloud:{provider}"
+    return "site"
+
+
+class TransferService:
+    """The hosted managed-transfer service (Globus role)."""
+
+    def __init__(self, credential_store: CredentialStore | None = None,
+                 marker_root: str | None = None, clock: Clock | None = None,
+                 data_link_factory=None):
+        self.creds = credential_store or CredentialStore()
+        self.markers = MarkerStore(marker_root or os.path.join(
+            os.environ.get("TMPDIR", "/tmp"), "repro-markers"))
+        self.clock = clock or DEFAULT_CLOCK
+        self._link_factory = data_link_factory or self._default_link
+        self._tasks: dict[str, TransferTask] = {}
+
+    # DTN<->DTN data channel selection (Figs. 4/5 topology)
+    def _default_link(self, src: Connector, dst: Connector) -> Link:
+        if _location(src) == _location(dst):
+            return loopback(self.clock)
+        from ..connectors.cloud import wan_link  # local import, no cycle
+        return wan_link(self.clock)
+
+    def submit(self, src: Endpoint, dst: Endpoint,
+               options: TransferOptions | None = None,
+               task_id: str | None = None, sync: bool = False) -> TransferTask:
+        options = options or TransferOptions()
+        if task_id is None:
+            basis = f"{src.resolved_id()}:{src.path}->{dst.resolved_id()}:{dst.path}"
+            task_id = hashlib.sha1(basis.encode()).hexdigest()[:16]
+        task = TransferTask(task_id)
+        self._tasks[task_id] = task
+        if sync:
+            self._run(task, src, dst, options)
+        else:
+            t = threading.Thread(target=self._run, args=(task, src, dst, options),
+                                 daemon=True)
+            t.start()
+        return task
+
+    def get(self, task_id: str) -> TransferTask:
+        return self._tasks[task_id]
+
+    # ---- execution -------------------------------------------------------
+    def _run(self, task: TransferTask, src: Endpoint, dst: Endpoint,
+             opt: TransferOptions) -> None:
+        t_start = time.monotonic()
+        task.status = TransferTask.ACTIVE
+        try:
+            # third-party coordination / endpoint activation (§5.4)
+            self.clock.sleep(opt.startup_cost)
+            s_src = src.connector.start(self.creds.lookup(src.resolved_id()))
+            s_dst = dst.connector.start(self.creds.lookup(dst.resolved_id()))
+            try:
+                self._execute(task, src, dst, s_src, s_dst, opt)
+            finally:
+                src.connector.destroy(s_src)
+                dst.connector.destroy(s_dst)
+        except Exception as e:
+            task.log(f"FATAL {type(e).__name__}: {e}")
+            task.stats.wall_seconds = time.monotonic() - t_start
+            task._finish(TransferTask.FAILED)
+            return
+        task.stats.wall_seconds = time.monotonic() - t_start
+        ok = task.stats.files_failed == 0
+        if ok:
+            self.markers.clear(task.task_id)
+        task._finish(TransferTask.SUCCEEDED if ok else TransferTask.FAILED)
+
+    def _expand(self, src: Endpoint, dst: Endpoint, s_src: Session):
+        """Directory expansion + per-file (src, dst, size) plan (§2.2)."""
+        root = src.path
+        info = src.connector.stat(s_src, root)
+        plan = []
+        if info.is_dir:
+            for fi in iter_files(src.connector, s_src, root):
+                rel = fi.name[len(root):].lstrip("/") if fi.name.startswith(root) \
+                    else os.path.basename(fi.name)
+                dpath = dst.path.rstrip("/") + "/" + rel
+                plan.append((fi.name, dpath, fi.size))
+        else:
+            dpath = dst.path
+            if dpath.endswith("/"):
+                dpath += os.path.basename(root)
+            plan.append((root, dpath, info.size))
+        return plan
+
+    def _execute(self, task: TransferTask, src: Endpoint, dst: Endpoint,
+                 s_src: Session, s_dst: Session, opt: TransferOptions) -> None:
+        plan = self._expand(src, dst, s_src)
+        state = self.markers.load(task.task_id)
+        fstate = state["files"]
+        task.stats.files_total = len(plan)
+        task.stats.bytes_total = sum(sz for _, _, sz in plan)
+        link = self._link_factory(src.connector, dst.connector)
+
+        queue: list[tuple[str, str, int]] = []
+        for sp, dp, sz in plan:
+            st = fstate.get(sp)
+            if st and st.get("complete"):
+                task.stats.files_done += 1
+                done_bytes = sz
+                task.stats.bytes_done += done_bytes
+                task.files.append(FileResult(sp, dp, sz, ok=True,
+                                             checksum=st.get("checksum")))
+                continue
+            if st:
+                task.stats.bytes_done += sum(ln for _, ln in st.get("done", []))
+            queue.append((sp, dp, sz))
+
+        qlock = threading.Lock()
+        active = [0]
+        stop = threading.Event()
+
+        def next_item():
+            with qlock:
+                if not queue:
+                    return None
+                return queue.pop(0)
+
+        def worker(worker_idx: int) -> None:
+            while not stop.is_set():
+                if opt.auto_tune and worker_idx >= task_target[0]:
+                    with qlock:
+                        drained = not queue
+                    if drained:  # nothing left to ramp into
+                        return
+                    time.sleep(0.002)
+                    continue
+                item = next_item()
+                if item is None:
+                    return
+                with qlock:
+                    active[0] += 1
+                try:
+                    self._transfer_file(task, src, dst, s_src, s_dst, opt,
+                                        link, fstate, state, *item)
+                finally:
+                    with qlock:
+                        active[0] -= 1
+
+        n_workers = opt.max_concurrency if opt.auto_tune else opt.concurrency
+        n_workers = max(1, min(n_workers, max(1, len(queue))))
+        task_target = [opt.concurrency]
+        tuner = None
+        if opt.auto_tune:
+            tuner = threading.Thread(
+                target=self._tune, args=(task, task_target, opt, stop), daemon=True)
+            tuner.start()
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        if tuner is not None:
+            tuner.join(timeout=1.0)
+        task.stats.effective_concurrency = float(task_target[0])
+
+    def _tune(self, task: TransferTask, target: list[int],
+              opt: TransferOptions, stop: threading.Event) -> None:
+        """§8 best practice automated: raise concurrency while marginal
+        throughput gain is positive ('we increased concurrency until we
+        see negative benefit')."""
+        best_rate = 0.0
+        settle = 0.1 if self.clock.scale > 0 else 0.02
+        while not stop.wait(settle):
+            rate = task.throughput(window=settle * 2)
+            if rate > best_rate * 1.05 and target[0] < opt.max_concurrency:
+                best_rate = max(best_rate, rate)
+                target[0] = min(opt.max_concurrency, target[0] * 2)
+                task.log(f"auto-tune: concurrency -> {target[0]}")
+            elif rate < best_rate * 0.7 and target[0] > 1:
+                target[0] = max(1, target[0] // 2)
+                task.log(f"auto-tune: backing off -> {target[0]}")
+
+    # ---- one file ----------------------------------------------------------
+    def _transfer_file(self, task: TransferTask, src: Endpoint, dst: Endpoint,
+                      s_src: Session, s_dst: Session, opt: TransferOptions,
+                      link: Link, fstate: dict, state: dict,
+                      spath: str, dpath: str, size: int) -> None:
+        result = FileResult(spath, dpath, size)
+        st = fstate.setdefault(spath, {"done": [], "complete": False})
+        attempts = 0
+        integrity_budget = opt.max_integrity_retries
+        while True:
+            attempts += 1
+            result.attempts = attempts
+            try:
+                # pipelined per-file command exchange on the control channel
+                self.clock.sleep(opt.file_pipeline_cost)
+                checksum = self._move_one(task, src, dst, s_src, s_dst, opt,
+                                          link, st, state, spath, dpath, size)
+                if opt.integrity and self._should_verify(spath, opt):
+                    ok = self._verify(dst, s_dst, dpath, checksum, opt)
+                    if not ok:
+                        task.stats.integrity_failures += 1
+                        task.log(f"integrity mismatch on {dpath}; re-sending")
+                        st["done"] = []  # full re-send
+                        st["complete"] = False
+                        if integrity_budget <= 0:
+                            raise IntegrityError(dpath)
+                        integrity_budget -= 1
+                        continue
+                result.checksum = checksum
+                result.ok = True
+                st["complete"] = True
+                st["checksum"] = checksum
+                self.markers.save(task.task_id, state)
+                task.stats.files_done += 1
+                task.files.append(result)
+                return
+            except TransientError as e:
+                task.stats.faults_retried += 1
+                if attempts > opt.max_retries:
+                    result.error = f"retries exhausted: {e}"
+                    break
+                backoff = max(getattr(e, "retry_after", 0.0),
+                              opt.retry_backoff * (2 ** (attempts - 1)))
+                task.log(f"transient fault on {spath} "
+                         f"({type(e).__name__}); retry in {backoff:.2f}s")
+                self.clock.sleep(backoff)
+            except IntegrityError as e:
+                result.error = f"integrity retries exhausted: {e}"
+                break
+            except Exception as e:
+                result.error = f"{type(e).__name__}: {e}"
+                break
+        task.stats.files_failed += 1
+        task.files.append(result)
+        task.log(f"FAILED {spath}: {result.error}")
+
+    def _should_verify(self, path: str, opt: TransferOptions) -> bool:
+        if opt.verify_sampling >= 1.0:
+            return True
+        h = int(hashlib.sha1(path.encode()).hexdigest()[:8], 16) / 0xFFFFFFFF
+        return h < opt.verify_sampling
+
+    def _move_one(self, task, src, dst, s_src, s_dst, opt, link,
+                  st: dict, state: dict, spath: str, dpath: str,
+                  size: int) -> str | None:
+        holes = _holes(size, st.get("done", []))
+        if not holes and size > 0:
+            return st.get("checksum")
+        if size == 0:
+            holes = []
+
+        marker_lock = threading.Lock()
+
+        def on_written(offset: int, length: int) -> None:
+            task._bytes_tick(length)
+            with marker_lock:
+                st["done"] = [list(r) for r in
+                              _merge_ranges(st.get("done", []) + [[offset, length]])]
+            # restart markers are flushed opportunistically (not per block)
+            if (offset // (16 * MB)) != ((offset + length) // (16 * MB)):
+                self.markers.save(task.task_id, state)
+
+        pipe = _FilePipe(size, holes, link, opt, on_written,
+                         opt.checksum_algorithm if opt.integrity else None)
+
+        send_err: list[Exception] = []
+
+        def do_send() -> None:
+            try:
+                src.connector.send(s_src, spath, pipe.send_channel)
+            except Exception as e:
+                send_err.append(e)
+                pipe.fail(e)
+
+        sender = threading.Thread(target=do_send, daemon=True)
+        sender.start()
+        recv_err: Exception | None = None
+        try:
+            dst.connector.recv(s_dst, dpath, pipe.recv_channel)
+        except Exception as e:
+            recv_err = e
+        sender.join()
+        if send_err:
+            raise send_err[0]
+        if recv_err is not None:
+            raise recv_err
+        full = len(holes) == 1 and holes[0].offset == 0 and holes[0].length == size
+        if opt.integrity and not full:
+            # resumed/holey transfer: the streaming hash didn't see the
+            # whole file — recompute at the source (§7 semantics)
+            return src.connector.checksum(s_src, spath, opt.checksum_algorithm)
+        return pipe.source_checksum()
+
+    def _verify(self, dst: Endpoint, s_dst: Session, dpath: str,
+                src_checksum: str | None, opt: TransferOptions) -> bool:
+        """§7 strong integrity: re-read the file at the destination and
+        compare checksums."""
+        if src_checksum is None:
+            return True
+        dst_sum = dst.connector.checksum(s_dst, dpath, opt.checksum_algorithm)
+        return dst_sum == src_checksum

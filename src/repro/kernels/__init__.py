@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the framework's compute hot-spots, each with a
+# jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py); validated in
+# interpret mode on CPU:
+#   flash_attention/ — online-softmax GQA attention (causal / SWA)
+#   ssm_scan/        — chunked gated linear recurrence (mamba2 / rwkv6)
+#   checksum/        — lanesum32 integrity checksum (paper §7, on-device)

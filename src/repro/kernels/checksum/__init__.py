@@ -1,0 +1,3 @@
+from .ops import checksum_array, checksum_digest
+
+__all__ = ["checksum_array", "checksum_digest"]

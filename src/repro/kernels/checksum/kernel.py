@@ -1,0 +1,71 @@
+"""Blocked lane checksum Pallas kernel ("lanesum32").
+
+The paper's §7 integrity check re-reads data and computes checksums on
+the DTN's CPUs.  On a TPU pod the *source-side* checksum of a checkpoint
+shard can be computed on-device before D2H, removing the host hash from
+the critical path.  Fletcher-style sequential checksums don't map to the
+VPU, so we adapt (DESIGN.md §5): the data is viewed as uint32 words laid
+out across the 8x128 VPU lanes; each grid step accumulates
+
+    a += w                  (plain sum,   mod 2^32 by int32 wraparound)
+    b += (i+1) * w          (index-weighted sum, order-sensitive)
+
+into per-lane int32 accumulators; a final host fold reduces the 8x128
+lanes to the 64-bit digest.  Deterministic for a fixed array shape and
+sensitive to both corruption and reordering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS, LANES = 8, 128
+BLOCK_WORDS = ROWS * LANES
+
+
+def _checksum_kernel(w_ref, a_out, b_out, a_scr, b_scr, *, n_blocks: int):
+    ib = pl.program_id(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        a_scr[...] = jnp.zeros_like(a_scr)
+        b_scr[...] = jnp.zeros_like(b_scr)
+
+    w = w_ref[0]  # (ROWS, LANES) int32
+    base = ib * BLOCK_WORDS
+    idx = (base + 1
+           + lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 0) * LANES
+           + lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1))
+    a_scr[...] = a_scr[...] + w
+    b_scr[...] = b_scr[...] + w * idx  # int32 wraparound == mod 2^32
+
+    @pl.when(ib == n_blocks - 1)
+    def _fin():
+        a_out[0] = a_scr[...]
+        b_out[0] = b_scr[...]
+
+
+def checksum_lanes(words):
+    """words: (n_blocks, ROWS, LANES) int32 -> (a_lanes, b_lanes) each
+    (ROWS, LANES) int32."""
+    n_blocks = words.shape[0]
+    kernel = functools.partial(_checksum_kernel, n_blocks=n_blocks)
+    a, b = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((1, ROWS, LANES), lambda i: (0, 0, 0)),
+                   pl.BlockSpec((1, ROWS, LANES), lambda i: (0, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, ROWS, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((1, ROWS, LANES), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((ROWS, LANES), jnp.int32),
+                        pltpu.VMEM((ROWS, LANES), jnp.int32)],
+        interpret=True,
+    )(words)
+    return a[0], b[0]

@@ -1,0 +1,50 @@
+"""Device-array checksums for checkpoint integrity (paper §7)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_WORDS, LANES, ROWS, checksum_lanes
+
+MOD = 1 << 32
+
+
+def _as_words(x) -> jnp.ndarray:
+    """Bit-cast any array to a flat int32 word stream (zero-pad tail)."""
+    flat = jnp.ravel(x)
+    nbytes = flat.size * flat.dtype.itemsize
+    b8 = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(nbytes)
+    pad = (-nbytes) % 4
+    if pad:
+        b8 = jnp.pad(b8, (0, pad))
+    w = b8.reshape(-1, 4).astype(jnp.uint32)
+    word = (w[:, 0] | (w[:, 1] << 8) | (w[:, 2] << 16) | (w[:, 3] << 24))
+    return word.astype(jnp.int32)
+
+
+def checksum_array(x, use_pallas: bool = True) -> tuple[int, int]:
+    """Lanesum32 (a, b) of an on-device array's little-endian bytes."""
+    words = _as_words(x)
+    n = words.size
+    pad = (-n) % BLOCK_WORDS
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    if use_pallas:
+        blocks = words.reshape(-1, ROWS, LANES)
+        a_l, b_l = checksum_lanes(blocks)
+        a = int(np.asarray(a_l, dtype=np.int64).astype(np.uint32)
+                .astype(np.uint64).sum() % MOD)
+        b = int(np.asarray(b_l, dtype=np.int64).astype(np.uint32)
+                .astype(np.uint64).sum() % MOD)
+        return a, b
+    from .ref import jnp_lanesum32
+    a, b = jnp_lanesum32(words)
+    return int(a), int(b)
+
+
+def checksum_digest(x, use_pallas: bool = True) -> str:
+    a, b = checksum_array(x, use_pallas=use_pallas)
+    return f"{b:08x}{a:08x}"

@@ -1,0 +1,116 @@
+"""Flash-attention forward Pallas kernel (TPU target).
+
+Online-softmax attention streamed over KV blocks: never materializes
+the (Sq, Skv) score matrix in HBM.  TPU-native blocking: the grid's two
+outer dims are embarrassingly parallel (batch, head); the inner dims
+walk query blocks and — sequentially, so VMEM scratch carries the
+running (m, l, acc) statistics — KV blocks.  Block shapes are
+MXU-aligned (multiples of 128 on the contracted dims).
+
+Supports GQA (query-head -> kv-head mapping via the index map), causal
+masking, and sliding windows (Mistral/Danube SWA).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int | None,
+                 block_q: int, block_kv: int, seq_q: int, seq_kv: int,
+                 n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bkv, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)  # (bq, bkv)
+
+    q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 0)
+    k_pos = ik * block_kv + lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_kv), 1)
+    mask = (k_pos < seq_kv) & (q_pos < seq_q)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]                             # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[:, 0] = l_scr[:, 0] * corr + p.sum(axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32))
+    m_scr[:, 0] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[:, 0], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool, window: int | None,
+                         real_dh: int, seq_q: int, seq_kv: int,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = True):
+    """q: (B, H, Sq, dh); k/v: (B, KV, Skv, dh) — pre-padded so that
+    Sq % block_q == Skv % block_kv == 0 and dh is lane-aligned.
+    ``seq_q``/``seq_kv`` are the *unpadded* lengths used for masking."""
+    B, H, Sq, dh = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    n_q = Sq // block_q
+    n_kv = Skv // block_kv
+    grid = (B, H, n_q, n_kv)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=1.0 / math.sqrt(real_dh), causal=causal,
+        window=window, block_q=block_q, block_kv=block_kv,
+        seq_q=seq_q, seq_kv=seq_kv, n_kv_blocks=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

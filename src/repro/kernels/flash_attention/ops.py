@@ -1,0 +1,63 @@
+"""jit-ready wrappers around the flash-attention kernel.
+
+``flash_attention`` pads/permutes (B,S,H,D) inputs to the kernel's
+MXU-aligned (B,H,S,D) layout and runs the Pallas kernel
+(``interpret=True`` on CPU — this container has no TPU).
+
+``flash_attention_auto`` is what the model layer calls: it dispatches on
+``cfg.attn_impl`` between the Pallas kernel and the memory-equivalent
+chunked-jnp path used for dry-run lowering (roofline numbers then
+reflect flash-style blocking, not an S^2 score tensor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = True):
+    """q: (B, Sq, H, dh); k/v: (B, Skv, KV, dh) -> (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    bkv = min(block_kv, max(8, 1 << (Skv - 1).bit_length()))
+    qt = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), 2, bq), 3, 128)
+    kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 2, bkv), 3, 128)
+    vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 2, bkv), 3, 128)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               real_dh=dh, seq_q=Sq, seq_kv=Skv,
+                               block_q=bq, block_kv=bkv, interpret=interpret)
+    return out[:, :, :Sq, :dh].transpose(0, 2, 1, 3)
+
+
+def flash_attention_auto(q, k, v, *, causal, window, cfg):
+    """Model-layer dispatch: Pallas on TPU-ish configs, chunked-jnp
+    otherwise (the dry-run path)."""
+    if cfg.attn_impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=jax.default_backend() != "tpu")
+    from ...models.layers import chunked_attention  # lazy: avoid cycle
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=min(cfg.attn_chunk, k.shape[1]),
+                             unroll=cfg.unroll_scans,
+                             shard_constrain=cfg.attn_shard_constraints,
+                             accum_bf16=cfg.attn_accum_bf16)

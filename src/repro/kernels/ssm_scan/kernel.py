@@ -1,0 +1,117 @@
+"""Chunked gated-linear-recurrence Pallas kernel (TPU target).
+
+Implements the chunk-parallel form of
+
+    S_t = diag(exp(g_t)) S_{t-1} + k_t^T v_t ;  y_t = q_t S_t  (+ rwkv6
+    u-bonus variant reading S_{t-1})
+
+for one (batch, head) per outer grid cell.  The chunk axis is the
+innermost grid dim and runs sequentially: the (K, V) state lives in VMEM
+scratch across chunks (this is how the TPU replaces the GPU's
+inter-block shared-memory handoff).  Within a chunk, sub-chunks of R=16
+turn the recurrence into MXU matmuls with all exponents <= 0
+(numerically safe — see repro/models/ssm.py for the derivation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, g_ref, u_ref, s0_ref, y_ref, sfin_ref,
+                s_scr, *, chunk: int, subchunk: int, n_chunks: int,
+                use_u: bool):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    L, R = chunk, subchunk
+    NS = L // R
+    q = q_ref[0, :, 0].astype(jnp.float32)   # (L, K)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)   # (L, V)
+    g = g_ref[0, :, 0].astype(jnp.float32)   # (L, K)
+    z = jnp.cumsum(g, axis=0)
+    zq = z - g if use_u else z
+    u = u_ref[0].astype(jnp.float32) if use_u else None  # (K,)
+
+    mask = lax.broadcasted_iota(jnp.int32, (R, R), 0) >= \
+        lax.broadcasted_iota(jnp.int32, (R, R), 1) + (1 if use_u else 0)
+    S = s_scr[...]
+    for s in range(NS):
+        sl = slice(s * R, (s + 1) * R)
+        qs, ks, vs = q[sl], k[sl], v[sl]
+        zs, zqs = z[sl], zq[sl]
+        z_start = z[s * R - 1] if s > 0 else jnp.zeros_like(z[0])
+        z_end = z[(s + 1) * R - 1]
+        # inter-chunk: state contribution
+        q_dec = qs * jnp.exp(zqs - z_start[None, :])
+        y = lax.dot_general(q_dec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (R, V)
+        # intra: pairwise within sub-chunk — (R, R, K) broadcast
+        Ez = jnp.exp(zqs[:, None, :] - zs[None, :, :])
+        A = jnp.sum(qs[:, None, :] * ks[None, :, :] * Ez, axis=-1)
+        A = jnp.where(mask, A, 0.0)
+        y = y + lax.dot_general(A, vs, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if use_u:
+            bonus = jnp.sum(qs * u[None, :] * ks, axis=-1)   # (R,)
+            y = y + bonus[:, None] * vs
+        y_ref[0, sl, 0] = y.astype(y_ref.dtype)
+        # carry state
+        k_dec = ks * jnp.exp(z_end[None, :] - zs)
+        S = (jnp.exp(z_end - z_start)[:, None] * S
+             + lax.dot_general(k_dec, vs, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32))
+    s_scr[...] = S
+
+    @pl.when(ic == n_chunks - 1)
+    def _fin():
+        sfin_ref[0, 0] = s_scr[...]
+
+
+def ssm_scan_bthk(q, k, v, g, u, s0, *, chunk: int = 128, subchunk: int = 16,
+                  interpret: bool = True):
+    """q,k,g: (B, T, H, K); v: (B, T, H, V); u: (H, K); s0: (B, H, K, V).
+    T must divide by ``chunk``.  Returns (y: (B,T,H,V), s_fin (B,H,K,V))."""
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    use_u = u is not None
+    if u is None:
+        u = jnp.zeros((H, K), jnp.float32)
+    NC = T // chunk
+    grid = (B, H, NC)
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, subchunk=subchunk,
+                               n_chunks=NC, use_u=use_u)
+    seq_spec = lambda b, h, ic: (b, ic, h, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, K), seq_spec),
+            pl.BlockSpec((1, chunk, 1, K), seq_spec),
+            pl.BlockSpec((1, chunk, 1, V), seq_spec),
+            pl.BlockSpec((1, chunk, 1, K), seq_spec),
+            pl.BlockSpec((1, K), lambda b, h, ic: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, V), seq_spec),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, V), q.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, u, s0)

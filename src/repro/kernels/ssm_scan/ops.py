@@ -1,0 +1,38 @@
+"""jit wrapper for the chunked gated-linear-recurrence kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssm_scan_bthk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "subchunk", "interpret",
+                                    "has_u"))
+def _ssm_scan_impl(q, k, v, g, u, s0, *, chunk, subchunk, interpret, has_u):
+    return ssm_scan_bthk(q, k, v, g, u if has_u else None, s0,
+                         chunk=chunk, subchunk=subchunk, interpret=interpret)
+
+
+def ssm_scan(q, k, v, log_decay, u=None, initial_state=None, *,
+             chunk: int = 128, subchunk: int = 16, interpret: bool = True):
+    """Public op.  Shapes as in repro.models.ssm.ssm_scan_ref.
+    Pads T up to a chunk multiple (decay 0 / k 0 padding is inert)."""
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+    pad = (-T) % chunk
+    if pad:
+        pad_cfg = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(x, pad_cfg) for x in (q, k, v))
+        log_decay = jnp.pad(log_decay, pad_cfg)
+    u_arg = u if u is not None else jnp.zeros((H, K), jnp.float32)
+    y, s_fin = _ssm_scan_impl(q, k, v, log_decay, u_arg, initial_state,
+                              chunk=chunk, subchunk=min(subchunk, chunk),
+                              interpret=interpret, has_u=u is not None)
+    return y[:, :T], s_fin

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the ssm_scan kernel: the exact step recurrence.
+
+(Re-exported from repro.models.ssm so the kernel test oracle and the
+model reference are literally the same code.)
+"""
+
+from ...models.ssm import ssm_scan_ref as ssm_scan_ref  # noqa: F401
+from ...models.ssm import ssm_scan_chunked as ssm_scan_chunked  # noqa: F401

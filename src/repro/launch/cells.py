@@ -1,0 +1,241 @@
+"""Cell assembly: for one (architecture x input-shape x mesh) cell,
+build the step function, in/out shardings, and abstract inputs.
+
+This is the single source of truth used by the dry-run, the launcher
+and the serving driver, so "it compiled in the dry-run" means the real
+entry points get exactly the same lowering.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import ArchConfig, SHAPES, ShapeConfig
+from ..models.registry import (build, input_specs, train_batch_specs,
+                               prefill_batch_specs)
+from ..optim import OptimizerConfig
+from ..runtime.steps import (abstract_train_state, make_prefill_step,
+                             make_serve_step, make_train_step)
+from ..sharding.rules import (AxisRules, axis_rules, batch_spec,
+                              param_specs, production_rules)
+
+
+def _axes_dividing(mesh, names: tuple[str, ...], size: int):
+    """Largest prefix-combination of mesh axes whose product divides
+    ``size``; returns tuple (possibly empty)."""
+    chosen = []
+    prod = 1
+    for n in names:
+        if n in mesh.shape and size % (prod * mesh.shape[n]) == 0:
+            chosen.append(n)
+            prod *= mesh.shape[n]
+    return tuple(chosen)
+
+
+def _maybe(axes):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    cfg: ArchConfig
+    shape: ShapeConfig
+    rules: AxisRules
+    step_fn: Any
+    in_shardings: Any
+    out_shardings: Any
+    abstract_inputs: tuple
+    kind: str  # train | prefill | decode
+
+
+def _dp_axes(mesh):
+    return tuple(n for n in ("pod", "data") if n in mesh.shape)
+
+
+def make_rules(cfg: ArchConfig, shape: ShapeConfig, mesh) -> AxisRules:
+    multi_pod = "pod" in mesh.shape
+    dp = _dp_axes(mesh)
+    dp_size = 1
+    for n in dp:
+        dp_size *= mesh.shape[n]
+    rules = production_rules(multi_pod,
+                             batch_divisible=shape.global_batch % dp_size == 0,
+                             mesh=mesh)
+    return rules
+
+
+def batch_sharding_tree(specs: dict, mesh, rules: AxisRules):
+    """NamedShardings for a train/prefill batch dict."""
+    def leaf(s):
+        bspec = batch_spec(s.shape[0], mesh)
+        full = P(*(list(bspec) + [None] * (len(s.shape) - 1)))
+        return NamedSharding(mesh, full)
+
+    return jax.tree.map(leaf, specs)
+
+
+def cache_sharding_tree(cache_specs, cfg: ArchConfig, shape: ShapeConfig,
+                        mesh):
+    """Per-leaf cache shardings (see DESIGN.md §4): batch over data axes
+    when divisible; KV heads over "model" when divisible, else the cache
+    sequence dim; long-context (B=1) shards sequence over everything."""
+    dp = _dp_axes(mesh)
+    B = shape.global_batch
+
+    def leaf_spec(path, s):
+        name = path[-1] if path else ""
+        dims = [None] * len(s.shape)
+        batch_axes = _axes_dividing(mesh, dp, B)
+        if name in ("attn_k", "attn_v", "cross_k", "cross_v"):
+            # (nb, n, B, S, KV, dh)
+            dims[2] = _maybe(batch_axes)
+            S_dim, KV_dim = s.shape[3], s.shape[4]
+            rem = [a for a in ("model",) + dp if a not in batch_axes
+                   or a == "model"]
+            # prefer sharding KV heads on "model"
+            if KV_dim % mesh.shape.get("model", 1) == 0:
+                dims[4] = "model"
+                seq_axes = _axes_dividing(
+                    mesh, tuple(a for a in dp if a not in batch_axes), S_dim)
+                dims[3] = _maybe(seq_axes)
+            else:
+                seq_pool = tuple(a for a in ("data", "model", "pod")
+                                 if a in mesh.shape and a not in batch_axes)
+                seq_axes = _axes_dividing(mesh, seq_pool, S_dim)
+                dims[3] = _maybe(seq_axes)
+        elif name == "ssm":
+            # (nb, n, B, H, K, V)
+            dims[2] = _maybe(batch_axes)
+            if s.shape[3] % mesh.shape.get("model", 1) == 0:
+                dims[3] = "model"
+        elif name in ("conv", "shift_t", "shift_c"):
+            dims[2] = _maybe(batch_axes)
+            if s.shape[-1] % mesh.shape.get("model", 1) == 0:
+                dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_specs)[0]
+    treedef = jax.tree_util.tree_structure(cache_specs)
+    out = []
+    for keypath, leafval in flat:
+        parts = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in keypath]
+        out.append(leaf_spec(parts, leafval))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_sharding_tree(state_specs, mesh, rules: AxisRules):
+    with axis_rules(rules):
+        pspecs = param_specs(state_specs["params"])
+        mspecs = param_specs(state_specs["opt"]["m"])
+        vspecs = param_specs(state_specs["opt"]["v"])
+    to_sh = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    return {
+        "params": to_sh(pspecs),
+        "opt": {"m": to_sh(mspecs), "v": to_sh(vspecs),
+                "step": NamedSharding(mesh, P())},
+    }
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, cfg: ArchConfig | None = None,
+               opt_cfg: OptimizerConfig | None = None) -> Cell:
+    from ..configs import get_config
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    rules = make_rules(cfg, shape, mesh)
+    api = build(cfg)
+    opt_cfg = opt_cfg or OptimizerConfig()
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        state_specs = abstract_train_state(api, opt_cfg)
+        state_sh = state_sharding_tree(state_specs, mesh, rules)
+        bspecs = train_batch_specs(cfg, shape)
+        batch_sh = batch_sharding_tree(bspecs, mesh, rules)
+        raw_step = make_train_step(api, opt_cfg)
+
+        def step(state, batch):
+            with axis_rules(rules):
+                return raw_step(state, batch)
+
+        return Cell(arch_id, shape_name, cfg, shape, rules, step,
+                    (state_sh, batch_sh),
+                    (state_sh, jax.tree.map(lambda _: repl,
+                                            _metric_specs())),
+                    (state_specs, bspecs), "train")
+
+    if shape.kind == "prefill":
+        pspecs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        with axis_rules(rules):
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               param_specs(pspecs))
+        bspecs = prefill_batch_specs(cfg, shape)
+        batch_sh = batch_sharding_tree(bspecs, mesh, rules)
+        raw_step = make_prefill_step(api)
+
+        def step(params, batch):
+            with axis_rules(rules):
+                return raw_step(params, batch)
+
+        cache_specs = jax.eval_shape(
+            lambda p, b: raw_step(p, b)[1], pspecs, bspecs)
+        cache_sh = cache_sharding_tree(cache_specs, cfg, shape, mesh)
+        vmodel = ("model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0
+                  else None)
+        logits_sh = NamedSharding(
+            mesh, P(*(list(batch_spec(shape.global_batch, mesh))
+                      + [None, vmodel])))
+        return Cell(arch_id, shape_name, cfg, shape, rules, step,
+                    (psh, batch_sh), (logits_sh, cache_sh),
+                    (pspecs, bspecs), "prefill")
+
+    # decode
+    pspecs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    with axis_rules(rules):
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_specs(pspecs))
+    specs = input_specs(cfg, shape_name)
+    token_spec, pos_spec, cache_specs = (specs["token"], specs["pos"],
+                                         specs["cache"])
+    cache_sh = cache_sharding_tree(cache_specs, cfg, shape, mesh)
+    tok_sh = NamedSharding(mesh, P(*(list(batch_spec(shape.global_batch,
+                                                     mesh)) + [None])))
+    raw_step = make_serve_step(api, greedy=True)
+
+    def step(params, cache, token, pos):
+        with axis_rules(rules):
+            return raw_step(params, cache, token, pos)
+
+    return Cell(arch_id, shape_name, cfg, shape, rules, step,
+                (psh, cache_sh, tok_sh, repl),
+                (tok_sh, cache_sh),
+                (pspecs, cache_specs, token_spec, pos_spec), "decode")
+
+
+def _metric_specs():
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    return {"loss": f32, "xent": f32, "moe_aux": f32, "grad_norm": f32,
+            "lr": f32}
+
+
+def lower_cell(cell: Cell, mesh, donate: bool = True):
+    """jit + lower the cell with its shardings (the dry-run entry)."""
+    donate_argnums = ()
+    if donate:
+        donate_argnums = (0,) if cell.kind == "train" else \
+            ((1,) if cell.kind == "decode" else ())
+    jitted = jax.jit(cell.step_fn,
+                     in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=donate_argnums)
+    with mesh:  # mesh context: bare PartitionSpec constraints resolve
+        lowered = jitted.lower(*cell.abstract_inputs)
+    return lowered

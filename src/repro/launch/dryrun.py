@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input shape) cell, on the 16x16 single-pod
+mesh and the 2x16x16 multi-pod mesh:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...) \
+            .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+plus the three-term roofline (repro.roofline) parsed from the compiled
+HLO.  Results cache as JSON under results/ so EXPERIMENTS.md tables are
+regenerable.  Any failure here is a bug in the sharding config.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only | --single-pod-only]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _depth_config(cfg, n_units: int):
+    """Config truncated to ``n_units`` scan blocks with every scan
+    unrolled — used for the blockwise cost extrapolation.  SSM chunking
+    switches to the TPU-native (L=512, R=128) MXU blocking so the
+    counted FLOPs reflect the kernel's real operating point (and the
+    unrolled sub-chunk graph stays small)."""
+    import dataclasses
+    unit = cfg.attn_every if cfg.family != "ssm" else 1
+    kw = dict(n_layers=n_units * unit, unroll_scans=True, unroll_blocks=True)
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(cfg.encdec,
+                                           n_encoder_layers=n_units)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk=512, subchunk=128)
+    return dataclasses.replace(cfg, **kw)
+
+
+def estimate_cost(arch_id: str, shape_name: str, mesh, cfg) -> dict:
+    """Blockwise extrapolation (see repro.roofline.analysis docstring):
+    compile 1-block and 2-block unrolled variants, extrapolate the
+    marginal block cost to full depth."""
+    from ..launch.cells import build_cell, lower_cell
+    from ..roofline import cost_numbers, extrapolate
+
+    nums = []
+    for units in (1, 2):
+        c = _depth_config(cfg, units)
+        cell = build_cell(arch_id, shape_name, mesh, cfg=c)
+        # cost compiles never execute: skip LLVM optimization of the
+        # unrolled bodies (HLO-level cost/collective numbers unchanged)
+        compiled = lower_cell(cell, mesh).compile(
+            {"xla_backend_optimization_level": 0})
+        nums.append(cost_numbers(compiled))
+    return extrapolate(nums[0], nums[1], cfg.n_blocks)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             results_dir: str = "results", skip_cost: bool = False) -> dict:
+    import jax
+    from ..configs import get_config
+    from ..launch.cells import build_cell, lower_cell
+    from ..launch.mesh import make_production_mesh, mesh_info
+    from ..models.common import SHAPES
+    from ..roofline import (cost_numbers, roofline_from_numbers,
+                            roofline_terms)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch_id)
+    compiler_options = None
+    if cfg.family == "hybrid":
+        # The hybrid stack hits a pathological CPU-backend codegen path;
+        # skip LLVM optimization (host codegen only — HLO, SPMD
+        # partitioning, memory_analysis and cost_analysis unchanged).
+        # For train, additionally unroll the inner ssm/attn chunk scans:
+        # the backward of nested whiles is the worst case; at 4k train
+        # the unrolled bodies stay small.  (Prefill at 32k keeps inner
+        # scans — 8k unrolled sub-units would explode the module.)
+        import dataclasses
+        compiler_options = {"xla_backend_optimization_level": 0}
+        if SHAPES[shape_name].kind == "train":
+            cfg = dataclasses.replace(cfg, unroll_scans=True)
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh, cfg=cfg)
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = (lowered.compile(compiler_options) if compiler_options
+                else lowered.compile())
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(f"[{arch_id} x {shape_name} @ {mesh_name}] memory_analysis: "
+          f"args={ma.argument_size_in_bytes/1e9:.2f}GB "
+          f"temps={ma.temp_size_in_bytes/1e9:.2f}GB "
+          f"out={ma.output_size_in_bytes/1e9:.2f}GB per device")
+    raw = cost_numbers(compiled)
+    print(f"  cost_analysis (scan-counted-once): flops/dev={raw['flops']:.3e} "
+          f"bytes/dev={raw['bytes']:.3e} coll/dev={raw['coll']['total']:.3e}")
+
+    # blockwise extrapolation for honest totals
+    if skip_cost:
+        numbers = raw
+        note = "raw cost_analysis (scan bodies counted once)"
+    else:
+        numbers = estimate_cost(arch_id, shape_name, mesh, cfg)
+        note = "blockwise extrapolation (1/2-block unrolled compiles)"
+    roof = roofline_from_numbers(numbers, arch=arch_id,
+                                 shape_name=shape_name, mesh_name=mesh_name,
+                                 n_devices=mesh.size, cfg=cfg,
+                                 shape=SHAPES[shape_name],
+                                 memory_analysis=ma, note=note)
+    print("  " + roofline_terms(roof))
+
+    rec = roof.to_dict()
+    rec.update({
+        "ok": True,
+        "lower_seconds": t_lower,
+        "compile_seconds": t_compile,
+        "bytes_per_dev_output": float(ma.output_size_in_bytes),
+        "raw_cost": {"flops": raw["flops"], "bytes": raw["bytes"],
+                     "coll_total": raw["coll"]["total"]},
+        "mesh_info": mesh_info(mesh),
+        "fits_hbm": (ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+        < 16 * 1024**3,
+        "kind": cell.kind,
+    })
+    os.makedirs(results_dir, exist_ok=True)
+    out = os.path.join(results_dir,
+                       f"dryrun_{arch_id}_{shape_name}_{mesh_name}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--results-dir", default="results")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip the 1/2-block cost extrapolation (multi-pod"
+                         " runs prove sharding; the roofline table is"
+                         " single-pod)")
+    args = ap.parse_args()
+
+    from ..configs import ARCH_IDS
+    from ..models.common import cells_for
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in cells_for(a)]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+    if args.multi_pod and False not in meshes:
+        meshes = [True]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            path = os.path.join(args.results_dir,
+                                f"dryrun_{arch}_{shape}_{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[skip cached] {arch} x {shape} @ {mesh_name}")
+                        continue
+            try:
+                run_cell(arch, shape, mp, args.results_dir,
+                         skip_cost=args.skip_cost or mp)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape, mesh_name, repr(e)))
+                os.makedirs(args.results_dir, exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump({"ok": False, "arch": arch, "shape": shape,
+                               "mesh": mesh_name, "error": repr(e)}, f)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f4 in failures:
+            print("  ", *f4)
+        return 1
+    print("\nALL DRY-RUN CELLS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

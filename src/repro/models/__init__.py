@@ -1,0 +1,8 @@
+from .common import (ArchConfig, EncDecConfig, MoEConfig, SSMConfig,
+                     ShapeConfig, SHAPES, VLMConfig, cells_for,
+                     LONG_CONTEXT_OK)
+from .registry import ModelApi, build, input_specs
+
+__all__ = ["ArchConfig", "EncDecConfig", "MoEConfig", "SSMConfig",
+           "ShapeConfig", "SHAPES", "VLMConfig", "cells_for",
+           "LONG_CONTEXT_OK", "ModelApi", "build", "input_specs"]

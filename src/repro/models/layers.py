@@ -1,0 +1,319 @@
+"""Composable layer library shared by all ten architectures.
+
+Functional style: every layer is (init_fn -> params pytree,
+apply_fn(params, x, ...)).  Param-tree *path names* are load-bearing —
+the sharding rules in ``repro.sharding.rules`` match on them.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ArchConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * lax.rsqrt(var + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional bias + optional sliding window)
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg: ArchConfig, dtype):
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], cfg.d_model, cfg.n_heads * dh, dtype,
+                          bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dtype,
+                          bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dtype,
+                          bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg.n_heads * dh, cfg.d_model, dtype,
+                          scale=1.0 / math.sqrt(cfg.n_heads * dh * 2 * cfg.n_layers)),
+    }
+
+
+def _qkv(p, x, x_kv, cfg):
+    B, S = x.shape[:2]
+    dh = cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, dh)
+    kv_src = x if x_kv is None else x_kv
+    Skv = kv_src.shape[1]
+    k = linear(p["wk"], kv_src).reshape(B, Skv, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], kv_src).reshape(B, Skv, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def full_attention(q, k, v, *, causal, window=None, q_offset=0,
+                   kv_positions=None):
+    """Reference softmax attention.  q: (B,Sq,H,dh) k/v: (B,Skv,KV,dh)."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(dh)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1]) if kv_positions is None else kv_positions
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def chunked_attention(q, k, v, *, causal, window=None, chunk=1024,
+                      q_offset=0, unroll=False, shard_constrain=False,
+                      accum_bf16=False):
+    """Online-softmax attention streamed over KV chunks — the memory
+    behaviour of the flash kernel (never materializes Sq x Skv), used
+    for large-shape lowering and as the Pallas oracle's outer loop."""
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if Skv % chunk:
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    qg = (q.reshape(B, Sq, KV, G, dh).astype(jnp.float32)
+          * (1.0 / math.sqrt(dh)))
+    q_pos = jnp.arange(Sq) + q_offset
+
+    kc = k.reshape(B, n_chunks, chunk, KV, dh)
+    vc = v.reshape(B, n_chunks, chunk, KV, dh)
+    if shard_constrain:
+        from ..sharding.rules import logical_constraint
+        kc = logical_constraint(kc, "batch", None, None, "kv_heads", None)
+        vc = logical_constraint(vc, "batch", None, None, "kv_heads", None)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        idx, k_i, v_i = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_i.astype(jnp.float32))
+        mask = k_pos[None, :] < Skv
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + p.sum(axis=-1)
+        if accum_bf16:
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(jnp.bfloat16),
+                            v_i.astype(jnp.bfloat16))
+            acc_new = (acc * corr[..., None].astype(acc.dtype)
+                       + pv.astype(acc.dtype))
+        else:
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqs,bskd->bkgqd", p,
+                                    v_i.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, dh),
+                   jnp.bfloat16 if accum_bf16 else jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=n_chunks if unroll else 1)
+    out = acc.astype(jnp.float32) / jnp.maximum(l, 1e-20)[..., None]
+    out = jnp.moveaxis(out, 3, 1)  # (B, Sq, KV, G, dh)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def attention_apply(p, x, cfg: ArchConfig, *, causal=True, positions=None,
+                    x_kv=None, use_rope=True):
+    """Full-sequence (train/prefill) attention; returns (out, (k, v))."""
+    B, S = x.shape[:2]
+    q, k, v = _qkv(p, x, x_kv, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope and x_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_shard_constraints:
+        from ..sharding.rules import logical_constraint
+        q = logical_constraint(q, "batch", None, "model", None)
+        k = logical_constraint(k, "batch", None, "kv_heads", None)
+        v = logical_constraint(v, "batch", None, "kv_heads", None)
+    if cfg.attn_impl == "full" or x_kv is not None:
+        out = full_attention(q, k, v, causal=causal, window=cfg.swa_window)
+    else:
+        from ..kernels.flash_attention.ops import flash_attention_auto
+        out = flash_attention_auto(q, k, v, causal=causal,
+                                   window=cfg.swa_window, cfg=cfg)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return linear(p["wo"], out), (k, v)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig, *,
+                     use_rope=True, cross_kv=None):
+    """One-token decode against a fixed-size KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, KV, dh); pos: scalar int32.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    dh = cfg.head_dim
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = linear(p["wq"], x).reshape(B, 1, cfg.n_heads, dh)
+        kv_len = k.shape[1]
+        mask_pos = jnp.arange(kv_len) < kv_len  # all visible
+    else:
+        q = linear(p["wq"], x).reshape(B, 1, cfg.n_heads, dh)
+        k_new = linear(p["wk"], x).reshape(B, 1, cfg.n_kv_heads, dh)
+        v_new = linear(p["wv"], x).reshape(B, 1, cfg.n_kv_heads, dh)
+        if use_rope:
+            pos_arr = jnp.full((B, 1), pos, jnp.int32)
+            q = apply_rope(q, pos_arr, cfg.rope_theta)
+            k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+        cache_k = lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        cache_v = lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+        k, v = cache_k, cache_v
+        kv_len = k.shape[1]
+        mask_pos = jnp.arange(kv_len) <= pos
+        if cfg.swa_window is not None:
+            mask_pos &= jnp.arange(kv_len) > pos - cfg.swa_window
+    KV = k.shape[2]
+    G = cfg.n_heads // KV
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    s *= 1.0 / math.sqrt(dh)
+    s = jnp.where(mask_pos[None, None, None, :], s, -1e30)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p_attn, v)
+    out = out.reshape(B, 1, cfg.n_heads * dh)
+    return linear(p["wo"], out), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(cfg.d_ff * 2 * cfg.n_layers)
+    if cfg.gated_mlp:
+        return {
+            "wi": linear_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "wg": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "wo": linear_init(ks[2], cfg.d_ff, cfg.d_model, dtype,
+                              scale=out_scale),
+        }
+    return {
+        "wi": linear_init(ks[0], cfg.d_model, cfg.d_ff, dtype, bias=True),
+        "wo": linear_init(ks[2], cfg.d_ff, cfg.d_model, dtype, bias=True,
+                          scale=out_scale),
+    }
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    if cfg.gated_mlp:
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x)
+    else:
+        h = jax.nn.gelu(linear(p["wi"], x))
+    return linear(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# sequence-chunked cross-entropy (never materializes full logits)
+# ---------------------------------------------------------------------------
+def chunked_xent(embed_table, x, labels, *, chunk: int, z_weight: float = 0.0,
+                 unroll: bool = False):
+    """x: (B, S, d) final hidden; labels: (B, S) int32 (-1 = ignore).
+
+    Computes mean token xent by scanning S in chunks so the (B, S, V)
+    logits tensor never exists — the standard big-vocab memory trick.
+    """
+    B, S, D = x.shape
+    V = embed_table.shape[0]
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    table = embed_table.astype(x.dtype)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        xi, li = inp
+        logits = (xi @ table.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(li, 0, V - 1)[..., None], axis=-1)[..., 0]
+        valid = li >= 0
+        loss = jnp.where(valid, lse - gold, 0.0)
+        if z_weight:
+            loss = loss + jnp.where(valid, z_weight * lse * lse, 0.0)
+        return (tot + loss.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.int32(0)), (xc, lc),
+                             unroll=n if unroll else 1)
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with top-k routing and scatter dispatch.
+
+Dispatch is the scatter/gather formulation (GShard-style positions, but
+without materializing the (T, E, C) one-hot dispatch tensor): tokens are
+scatter-added into per-expert capacity buffers, expert FFNs run as one
+batched einsum over (E, C, D), and outputs gather back weighted by the
+renormalized router probabilities.  Experts shard over the "model" mesh
+axis (expert parallelism); capacity shards over the data axes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from .layers import _normal
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    p = {
+        "router": {"w": _normal(ks[0], (d, E), jnp.float32, scale_in)},
+        "wi": _normal(ks[1], (E, d, f), dtype, scale_in),
+        "wo": _normal(ks[2], (E, f, d), dtype, scale_out),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = _normal(ks[3], (E, d, f), dtype, scale_in)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (y: (B, S, D), aux: dict with load-balance loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = capacity(T, cfg)
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate, idx = jax.lax.top_k(probs, K)                          # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)             # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) - 1                           # (T*K, E)
+    pos = jnp.sum(pos * flat, axis=-1)                           # (T*K,)
+    expert = idx.reshape(T * K)
+    keep = pos < C                                               # capacity drop
+
+    # scatter tokens into (E, C, D) buffers
+    token_idx = jnp.repeat(jnp.arange(T), K)
+    src = jnp.take(xt, token_idx, axis=0)                        # (T*K, D)
+    src = src * keep[:, None].astype(src.dtype)
+    pos_c = jnp.where(keep, pos, C - 1)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    if cfg.moe_shard_constraints == "expert":
+        from ..sharding.rules import logical_constraint
+        src = logical_constraint(src, "batch", None)
+        buf = logical_constraint(buf, "expert", None, None)
+    elif cfg.moe_shard_constraints == "capacity":
+        from ..sharding.rules import logical_constraint
+        src = logical_constraint(src, "batch", None)
+        buf = logical_constraint(buf, "expert", "batch", None)
+    buf = buf.at[expert, pos_c].add(src, mode="drop",
+                                    unique_indices=False)
+    if cfg.moe_shard_constraints == "expert":
+        from ..sharding.rules import logical_constraint
+        buf = logical_constraint(buf, "expert", None, None)
+    elif cfg.moe_shard_constraints == "capacity":
+        from ..sharding.rules import logical_constraint
+        buf = logical_constraint(buf, "expert", "batch", None)
+
+    # batched expert FFN on the MXU: (E, C, D) x (E, D, F)
+    h_in = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                   p["wg"].astype(x.dtype))) * h_in
+    else:
+        h = jax.nn.gelu(h_in)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+    if cfg.moe_shard_constraints == "expert":
+        from ..sharding.rules import logical_constraint
+        h = logical_constraint(h, "expert", None, None)
+        out_buf = logical_constraint(out_buf, "expert", None, None)
+    elif cfg.moe_shard_constraints == "capacity":
+        from ..sharding.rules import logical_constraint
+        h = logical_constraint(h, "expert", "batch", None)
+        out_buf = logical_constraint(out_buf, "expert", "batch", None)
+
+    # gather back + weighted combine over the K slots
+    gathered = out_buf[expert, pos_c]                            # (T*K, D)
+    gathered = gathered * (keep[:, None] * gate.reshape(T * K)[:, None]
+                           ).astype(x.dtype)
+    y = jnp.sum(gathered.reshape(T, K, D), axis=1)
+
+    # GShard/Switch load-balance auxiliary loss
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = (onehot.sum(axis=1).astype(jnp.float32)).mean(axis=0)   # fraction routed
+    aux_loss = E * jnp.sum(me * ce) / K
+    return y.reshape(B, S, D), {"moe_aux": aux_loss,
+                                "moe_drop_frac":
+                                    1.0 - keep.mean().astype(jnp.float32)}

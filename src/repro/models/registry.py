@@ -1,0 +1,98 @@
+"""Public model API: build any assigned architecture from its config and
+get (init / train_step loss / prefill / decode) functions plus
+ShapeDtypeStruct ``input_specs`` for dry-run lowering."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+from .common import ArchConfig, ShapeConfig, SHAPES
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable          # key -> params
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch, pad_to) -> (logits, cache, pos)
+    decode: Callable        # (params, cache, token, pos) -> (logits, cache)
+
+    def abstract_params(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init, key)
+
+    def make_cache(self, batch: int, max_seq: int, abstract: bool = False,
+                   enc_len: int | None = None):
+        fn = lambda: tf.make_decode_cache(self.cfg, batch, max_seq,
+                                          enc_len=enc_len)
+        return jax.eval_shape(fn) if abstract else fn()
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    def init(key):
+        return tf.init_params(key, cfg)
+
+    def loss(params, batch):
+        return tf.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch, pad_to=None):
+        return tf.prefill(params, batch, cfg, pad_to=pad_to)
+
+    def decode(params, cache, token, pos):
+        return tf.decode_step(params, cache, token, pos, cfg)
+
+    return ModelApi(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                    decode=decode)
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch, shape) cell — ShapeDtypeStructs, no allocation
+# ---------------------------------------------------------------------------
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.is_encdec:
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encdec.n_audio_ctx, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.vlm is not None:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm.n_image_tokens, cfg.vlm.patch_dim),
+            jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(token, pos, cache) specs for serve_step lowering: one new token
+    against a KV/state cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    api = build(cfg)
+    cache = api.make_cache(B, S, abstract=True)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, pos, cache
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """Everything dryrun needs for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    token, pos, cache = decode_specs(cfg, shape)
+    return {"token": token, "pos": pos, "cache": cache}

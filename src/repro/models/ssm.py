@@ -1,0 +1,171 @@
+"""Chunked gated linear recurrence — the shared math under the Jamba
+mamba layers (Mamba-2/SSD-style scalar-per-head decay) and RWKV6
+(per-key data-dependent decay, "Finch").
+
+Recurrence (per batch b, head h; K = key dim, V = value dim):
+
+    S_t = diag(a_t) @ S_{t-1} + k_t^T v_t          S in R^{K x V}
+    y_t = q_t @ S_t                                 (mamba2; inclusive)
+    y_t = q_t @ (S_{t-1} + diag(u) k_t^T v_t)       (rwkv6; u = bonus)
+
+with a_t = exp(g_t), g_t <= 0.  Two implementations:
+
+* ``ssm_scan_ref``    — exact step recurrence via ``lax.scan`` (oracle).
+* ``ssm_scan_chunked``— chunk-parallel form: intra-(sub)chunk pairwise
+  term + inter-chunk state carry.  Every exponent is a difference
+  z_i - z_j with j <= i of a *decreasing* cumulative log-decay, hence
+  <= 0: numerically safe without clamping.  This is the formulation the
+  Pallas ``ssm_scan`` kernel implements on the MXU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(q, k, v, log_decay, u=None, initial_state=None):
+    """Exact recurrence.  Shapes:
+      q, k: (B, T, H, K); v: (B, T, H, V); log_decay: (B, T, H, K)
+      u: (H, K) or None; initial_state: (B, H, K, V) or None.
+    Returns (y: (B, T, H, V), final_state: (B, H, K, V)).  float32 inside.
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    gf = log_decay.astype(jnp.float32)
+    S0 = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, gt = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        if u is None:
+            S_new = jnp.exp(gt)[..., None] * S + kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt, S_new)
+        else:
+            y = jnp.einsum("bhk,bhkv->bhv", qt,
+                           S + u.astype(jnp.float32)[None, :, :, None] * kv)
+            S_new = jnp.exp(gt)[..., None] * S + kv
+        return S_new, y
+
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(gf, 1, 0))
+    S_fin, ys = lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,H,V)
+    return y.astype(q.dtype), S_fin
+
+
+def ssm_scan_chunked(q, k, v, log_decay, u=None, initial_state=None,
+                     chunk: int = 128, subchunk: int = 16,
+                     scalar_decay: bool = False, unroll: bool = False,
+                     shard_constrain: bool = False,
+                     io_dtype=jnp.float32):
+    """Chunk-parallel equivalent of :func:`ssm_scan_ref`.
+
+    ``scalar_decay=True`` asserts log_decay is constant over K (mamba2's
+    per-head scalar), enabling the cheap (R, R) pairwise path instead of
+    the per-key (R, R, K) one.
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:  # zero k/v/g padding is inert to the recurrence
+        pc = ((0, 0), (0, pad), (0, 0), (0, 0))
+        y_pad, s_fin = ssm_scan_chunked(
+            jnp.pad(q, pc), jnp.pad(k, pc), jnp.pad(v, pc),
+            jnp.pad(log_decay, pc), u=u, initial_state=initial_state,
+            chunk=L, subchunk=subchunk, scalar_decay=scalar_decay,
+            unroll=unroll, shard_constrain=shard_constrain,
+            io_dtype=io_dtype)
+        return y_pad[:, :T], s_fin
+    R = min(subchunk, L)
+    if L % R:
+        raise ValueError(f"chunk={L} must divide by subchunk={R}")
+    NC, NS = T // L, L // R
+
+    qf = q.astype(io_dtype).reshape(B, NC, L, H, K)
+    kf = k.astype(io_dtype).reshape(B, NC, L, H, K)
+    vf = v.astype(io_dtype).reshape(B, NC, L, H, V)
+    Kg = log_decay.shape[-1]  # 1 for scalar-per-head decay (broadcasts)
+    gf = log_decay.astype(jnp.float32).reshape(B, NC, L, H, Kg)
+    if shard_constrain:
+        from ..sharding.rules import logical_constraint
+        spec = ("batch", None, None, "model", None)
+        qf = logical_constraint(qf, *spec)
+        kf = logical_constraint(kf, *spec)
+        vf = logical_constraint(vf, *spec)
+        gf = logical_constraint(gf, *spec)
+    uf = None if u is None else u.astype(jnp.float32)
+    S0 = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    causal_incl = jnp.tril(jnp.ones((R, R), jnp.float32))
+    causal_strict = jnp.tril(jnp.ones((R, R), jnp.float32), k=-1)
+
+    def chunk_step(S, inp):
+        qc, kc, vc, gc = inp           # (B,L,H,K/V)
+        qc, kc, vc = (t.astype(jnp.float32) for t in (qc, kc, vc))
+        z = jnp.cumsum(gc, axis=1)     # inclusive cumulative log decay
+        # rwkv6 reads the state *before* the current step's decay: the
+        # q-side exponent uses the exclusive cumsum z - g.
+        zq_all = z - gc if uf is not None else z
+        ys = []
+        for s in range(NS):
+            sl = slice(s * R, (s + 1) * R)
+            qs, ks, vs = qc[:, sl], kc[:, sl], vc[:, sl]
+            zs, zqs = z[:, sl], zq_all[:, sl]
+            z_start = (z[:, s * R - 1] if s > 0
+                       else jnp.zeros_like(z[:, 0]))  # (B,H,K)
+            z_end = z[:, (s + 1) * R - 1]
+            # inter: contribution of the running state S
+            q_dec = qs * jnp.exp(zqs - z_start[:, None])     # exp <= 1
+            y = jnp.einsum("brhk,bhkv->brhv", q_dec, S)
+            # intra: pairwise within the sub-chunk
+            if scalar_decay:
+                zh, zqh = zs[..., 0], zqs[..., 0]            # (B,R,H)
+                E = jnp.exp(zqh[:, :, None] - zh[:, None])   # (B,R,R,H), j<=i safe
+                A = jnp.einsum("bihk,bjhk->bijh", qs, ks) * E
+                mask = causal_strict if uf is not None else causal_incl
+                A = A * mask[None, :, :, None]
+                y = y + jnp.einsum("bijh,bjhv->bihv", A, vs)
+            else:
+                # per-key decay: (R,R,K) pairwise in sub-chunks only
+                Ez = jnp.exp(zqs[:, :, None] - zs[:, None])  # (B,R,R,H,K)
+                A = jnp.einsum("bihk,bjhk,bijhk->bijh", qs, ks, Ez)
+                mask = causal_strict if uf is not None else causal_incl
+                A = A * mask[None, :, :, None]
+                y = y + jnp.einsum("bijh,bjhv->bihv", A, vs)
+            if uf is not None:  # rwkv6 current-token bonus
+                bonus = jnp.einsum("brhk,hk,brhk->brh", qs, uf, ks)
+                y = y + bonus[..., None] * vs
+            ys.append(y)
+            # state carry to next sub-chunk (all exponents <= 0)
+            k_dec = ks * jnp.exp(z_end[:, None] - zs)
+            S = (jnp.exp(z_end - z_start)[..., None] * S
+                 + jnp.einsum("brhk,brhv->bhkv", k_dec, vs))
+        return S, jnp.concatenate(ys, axis=1)
+
+    S_fin, yc = lax.scan(chunk_step, S0,
+                         tuple(jnp.moveaxis(t, 1, 0)
+                               for t in (qf, kf, vf, gf)),
+                         unroll=NC if unroll else 1)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, T, H, V)
+    return y.astype(q.dtype), S_fin
+
+
+def ssm_decode_step(q, k, v, log_decay, state, u=None):
+    """One-token decode: q,k: (B,H,K); v: (B,H,V); state: (B,H,K,V)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    gf = log_decay.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    if u is None:
+        S_new = jnp.exp(gf)[..., None] * state + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qf, S_new)
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", qf,
+                       state + u.astype(jnp.float32)[None, :, :, None] * kv)
+        S_new = jnp.exp(gf)[..., None] * state + kv
+    return y.astype(q.dtype), S_new

@@ -1,0 +1,8 @@
+from .hw import HW_V5E, Hardware
+from .analysis import (cost_numbers, extrapolate, model_flops,
+                       roofline_from_numbers, roofline_terms, Roofline)
+from .hlo import collective_bytes
+
+__all__ = ["HW_V5E", "Hardware", "cost_numbers", "extrapolate",
+           "model_flops", "roofline_from_numbers", "roofline_terms",
+           "Roofline", "collective_bytes"]

@@ -1,0 +1,167 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / peak_FLOPs            (per chip, seconds)
+    memory     = HLO_bytes / HBM_bw                (per chip, seconds)
+    collective = collective_bytes / ICI_bw         (per chip, seconds)
+
+cost_analysis() and the parsed HLO are both per-device (post-SPMD), so
+no further division by chip count is needed.
+
+XLA's static cost analysis counts a while-loop body ONCE, so a model
+lowered as ``lax.scan`` over N layer-blocks under-reports by ~N.  The
+dry-run therefore performs *blockwise extrapolation*: it compiles the
+same cell at depth 1 block and 2 blocks with every scan fully unrolled,
+and extrapolates  total = c1 + (n_blocks - 1) * (c2 - c1)  for FLOPs,
+bytes and collective bytes.  The full-depth compile (the deliverable)
+still provides memory_analysis().
+
+MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; 2*N*D for inference)
+measures how much of the compiled compute is "useful" — the ratio
+catches remat and redundancy waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+
+from .hlo import collective_bytes
+from .hw import HW_V5E, Hardware
+
+
+def cost_numbers(compiled) -> dict:
+    """{'flops', 'bytes', 'coll': {...}} for one compiled executable
+    (per-device)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def extrapolate(c1: dict, c2: dict, n_blocks: int) -> dict:
+    """total = c1 + (n_blocks - 1) * max(c2 - c1, 0) elementwise."""
+    def lin(a, b):
+        return a + (n_blocks - 1) * max(b - a, 0.0)
+
+    by_op = {}
+    ops = set(c1["coll"]["by_op"]) | set(c2["coll"]["by_op"])
+    for op in ops:
+        a = c1["coll"]["by_op"].get(op, 0)
+        b = c2["coll"]["by_op"].get(op, 0)
+        by_op[op] = int(lin(a, b))
+    counts = {}
+    for op in ops:
+        a = c1["coll"]["count"].get(op, 0)
+        b = c2["coll"]["count"].get(op, 0)
+        counts[op] = int(lin(a, b))
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "coll": {"total": int(sum(by_op.values())), "by_op": by_op,
+                 "count": counts},
+    }
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_detail: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs * n_devices)
+    peak_fraction: float          # useful-flops time / dominant term
+    bytes_per_dev_argument: float = 0.0
+    bytes_per_dev_temp: float = 0.0
+    note: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def _count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the abstract tree."""
+    import jax
+    import numpy as np
+    from ..models.registry import build
+    api = build(cfg)
+    shapes = api.abstract_params()
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0.0
+    for keypath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in keypath)
+        n = float(np.prod(leaf.shape))
+        total += n
+        if ("moe/wi" in path or "moe/wg" in path or "moe/wo" in path) \
+                and cfg.moe is not None:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the whole (global) step."""
+    total, active = _count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def roofline_from_numbers(numbers: dict, *, arch: str, shape_name: str,
+                          mesh_name: str, n_devices: int, cfg, shape,
+                          memory_analysis=None, hw: Hardware = HW_V5E,
+                          note: str = "") -> Roofline:
+    flops = numbers["flops"]
+    bytes_accessed = numbers["bytes"]
+    coll = numbers["coll"]
+
+    t_compute = flops / hw.peak_flops_bf16
+    t_memory = bytes_accessed / hw.hbm_bw
+    ici = hw.ici_bw_per_link * hw.ici_links
+    t_coll = coll["total"] / ici
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * n_devices, 1.0)
+    t_useful = mf / n_devices / hw.peak_flops_bf16
+    peak_fraction = t_useful / max(max(terms.values()), 1e-30)
+
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops_per_dev=flops, hlo_bytes_per_dev=bytes_accessed,
+        coll_bytes_per_dev=float(coll["total"]), coll_detail=coll,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops_global=mf, useful_ratio=useful,
+        peak_fraction=peak_fraction, note=note,
+    )
+    if memory_analysis is not None:
+        r.bytes_per_dev_argument = float(memory_analysis.argument_size_in_bytes)
+        r.bytes_per_dev_temp = float(memory_analysis.temp_size_in_bytes)
+    return r
+
+
+def roofline_terms(r: Roofline) -> str:
+    return (f"{r.arch} x {r.shape} [{r.mesh}]: "
+            f"compute {r.t_compute * 1e3:.1f} ms | "
+            f"memory {r.t_memory * 1e3:.1f} ms | "
+            f"collective {r.t_collective * 1e3:.1f} ms "
+            f"-> {r.bottleneck}-bound; useful {r.useful_ratio:.2f}, "
+            f"roofline fraction {r.peak_fraction:.2f}")

@@ -1,0 +1,115 @@
+"""Collective-byte extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has no collective numbers, so we parse the
+per-device HLO module.  Post-SPMD operands are printed as ``%refs`` (no
+shapes), so we read each collective instruction's *output* shape(s) and
+convert to moved bytes per op type:
+
+  all-reduce          bytes = out           (each ref sums operand sizes;
+                                             ring wire cost ~2x, noted)
+  all-gather          bytes = out           (device receives the gathered
+                                             buffer; operand = out/G)
+  reduce-scatter      bytes = out * G       (operand = full input shard)
+  all-to-all          bytes = out           (sends+receives one buffer)
+  collective-permute  bytes = out
+
+G = replica-group size parsed from ``replica_groups=[n_groups,G]<=...``.
+Shapes in post-SPMD HLO are per-device shard shapes, so totals here are
+bytes per chip.  Async ``-start``/``-done`` pairs count once.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _out_bytes(line: str) -> int:
+    """Sum of output-shape bytes on the lhs of the instruction."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # output shape(s) = everything before the op name token
+    for op in _OPS:
+        idx = rhs.find(f" {op}")
+        if idx >= 0:
+            out_part = rhs[:idx + 1]
+            return sum(_shape_bytes(d, dims)
+                       for d, dims in _SHAPE_RE.findall(out_part))
+    return 0
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _which_op(line: str) -> str | None:
+    for op in _OPS:
+        for form in (f" {op}(", f" {op}-start(", f" {op}("):
+            if form in line:
+                return op
+        # dialect variants, e.g. "all-reduce-scatter" guard: exact match
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    by_op: dict[str, int] = defaultdict(int)
+    count: dict[str, int] = defaultdict(int)
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if "-done(" in line:
+            continue  # async pair counted at -start
+        op = None
+        # reduce-scatter must be matched before all-reduce-ish confusion
+        for cand in ("reduce-scatter", "all-reduce", "all-gather",
+                     "all-to-all", "collective-permute"):
+            if f" {cand}(" in line or f" {cand}-start(" in line:
+                op = cand
+                break
+        if op is None:
+            continue
+        nbytes = _out_bytes(line)
+        if op == "reduce-scatter":
+            nbytes *= _group_size(line)
+        by_op[op] += nbytes
+        count[op] += 1
+    return {"total": int(sum(by_op.values())),
+            "by_op": {k: int(v) for k, v in by_op.items()},
+            "count": dict(count)}
+
+
+def collective_breakdown_table(hlo_text: str) -> str:
+    info = collective_bytes(hlo_text)
+    lines = ["op,count,bytes"]
+    for op in sorted(info["by_op"]):
+        lines.append(f"{op},{info['count'][op]},{info['by_op'][op]}")
+    lines.append(f"TOTAL,,{info['total']}")
+    return "\n".join(lines)

@@ -1,0 +1,27 @@
+"""Hardware model: TPU v5e (the assignment's target)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops_bf16: float   # per chip
+    hbm_bw: float            # per chip, B/s
+    hbm_bytes: float         # per chip
+    ici_bw_per_link: float   # B/s, one ICI link
+    ici_links: int           # usable links per chip (2D torus)
+    dcn_bw: float            # per-chip share of inter-pod DCN, B/s
+
+
+HW_V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_bw_per_link=50e9,   # per assignment: ~50 GB/s/link
+    ici_links=1,            # conservative single-link roofline term
+    dcn_bw=6.25e9,          # ~50 Gb/s per-chip DCN share across pods
+)

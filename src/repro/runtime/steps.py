@@ -1,0 +1,81 @@
+"""jit-able train / prefill / serve step functions.
+
+``train_step`` is the canonical (state, batch) -> (state, metrics)
+update: loss, grads, global-norm clip, AdamW with sharded bf16 moments.
+``serve_step`` consumes one token against a fixed-size cache (decode
+shapes lower exactly this, per the assignment).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import ModelApi
+from ..optim import OptimizerConfig, adamw_init, adamw_update
+
+
+def make_train_state(api: ModelApi, opt_cfg: OptimizerConfig, key=None):
+    params = api.init(key if key is not None else jax.random.PRNGKey(0))
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def abstract_train_state(api: ModelApi, opt_cfg: OptimizerConfig):
+    return jax.eval_shape(lambda k: make_train_state(api, opt_cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def make_train_step(api: ModelApi, opt_cfg: OptimizerConfig,
+                    accum_steps: int = 1) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+        else:
+            # gradient accumulation over microbatches (leading split)
+            def micro(carry, mb):
+                acc, ltot = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, ltot + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            (grads, ltot), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = ltot / accum_steps
+            metrics = {}
+        params, opt, om = adamw_update(state["params"], grads,
+                                       state["opt"], opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(api: ModelApi, pad_to: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, pos = api.prefill(params, batch, pad_to=pad_to)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(api: ModelApi, greedy: bool = True) -> Callable:
+    def serve_step(params, cache, token, pos):
+        logits, cache = api.decode(params, cache, token, pos)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache
+        return logits, cache
+
+    return serve_step

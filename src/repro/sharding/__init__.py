@@ -1,0 +1,5 @@
+from .rules import (AxisRules, axis_rules, current_rules, logical_constraint,
+                    logical_spec, param_specs, batch_spec)
+
+__all__ = ["AxisRules", "axis_rules", "current_rules", "logical_constraint",
+           "logical_spec", "param_specs", "batch_spec"]

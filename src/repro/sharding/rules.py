@@ -1,0 +1,212 @@
+"""Logical-axis sharding rules.
+
+Model code annotates activations with *logical* axis names; a context
+maps them to physical mesh axes per (mesh, arch, shape) cell, so the
+same model lowers on the 1-device smoke mesh, the 16x16 single-pod mesh
+and the 2x16x16 multi-pod mesh.
+
+Parameter shardings are derived from param-tree *path patterns*
+(fnmatch) -> logical specs, resolved against the same rules: this is the
+ZeRO-3 + TP layout described in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (str, tuple or
+    None).  Unknown logical names resolve to None (replicated).  When a
+    mesh is attached, shardings that do not divide a dim are dropped
+    (e.g. vocab 51865 on a 16-way model axis -> replicated)."""
+
+    def __init__(self, mapping: dict[str, object] | None = None, mesh=None):
+        self.mapping = dict(mapping or {})
+        self.mesh = mesh
+
+    def physical(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.mapping.get(logical)
+
+    def physical_for_dim(self, logical: str | None, dim_size: int | None):
+        axes = self.physical(logical)
+        if axes is None or dim_size is None or self.mesh is None:
+            return axes
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        prod = 1
+        for n in names:
+            prod *= int(self.mesh.shape.get(n, 1))
+        if dim_size % prod != 0:
+            return None
+        return axes
+
+    def spec(self, *logical_axes) -> P:
+        return P(*[self.physical(a) for a in logical_axes])
+
+
+_state = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: AxisRules | dict | None):
+    if isinstance(rules, dict):
+        rules = AxisRules(rules)
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(*logical_axes) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P(*[None for _ in logical_axes])
+    return rules.spec(*logical_axes)
+
+
+def logical_constraint(x, *logical_axes):
+    """with_sharding_constraint against the active rules; no-op when no
+    rules are installed (smoke tests) or no mesh is active."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(*logical_axes)
+    if all(s is None for s in spec):
+        return x
+    try:
+        return lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# production rule sets
+# ---------------------------------------------------------------------------
+def production_rules(multi_pod: bool, *, batch_divisible: bool = True,
+                     shard_kv_heads: bool = True, mesh=None) -> AxisRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    dp = dp if batch_divisible else None
+    return AxisRules({
+        "batch": dp,
+        "fsdp": ("pod", "data") if multi_pod else ("data",),
+        "model": ("model",),
+        "expert": ("model",),
+        "kv_seq": ("data",),               # long-context cache sharding
+        "kv_heads": ("model",) if shard_kv_heads else None,
+    }, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# parameter layout: path pattern -> logical axes per dim
+# ---------------------------------------------------------------------------
+#: fnmatch patterns over '/'-joined param paths.  First match wins.
+#: None entries mean replicated dims; a leading '#' axis marks the
+#: stacked-blocks dim (never sharded).
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / lm head: vocab over model, d over fsdp
+    ("embed/table",            ("model", "fsdp")),
+    ("lm_head/w",              ("fsdp", "model")),
+    ("vision_proj/w",          (None, "fsdp")),
+    # attention
+    ("*wq/w",                  ("fsdp", "model")),
+    ("*wk/w",                  ("fsdp", "model")),
+    ("*wv/w",                  ("fsdp", "model")),
+    ("*wo/w",                  ("model", "fsdp")),
+    ("*wq/b",                  ("model",)),
+    ("*wk/b",                  ("model",)),
+    ("*wv/b",                  ("model",)),
+    # dense MLP
+    ("*mlp/wi/w",              ("fsdp", "model")),
+    ("*mlp/wg/w",              ("fsdp", "model")),
+    ("*mlp/wo/w",              ("model", "fsdp")),
+    ("*mlp/wi/b",              ("model",)),
+    ("*mlp/wo/b",              (None,)),
+    # MoE: experts over the model axis (EP), d over fsdp
+    ("*moe/router/w",          ("fsdp", None)),
+    ("*moe/wi",                ("expert", "fsdp", None)),
+    ("*moe/wg",                ("expert", "fsdp", None)),
+    ("*moe/wo",                ("expert", None, "fsdp")),
+    # mamba2
+    ("*mamba/wx/w",            ("fsdp", "model")),
+    ("*mamba/wz/w",            ("fsdp", "model")),
+    ("*mamba/wB/w",            ("fsdp", None)),
+    ("*mamba/wC/w",            ("fsdp", None)),
+    ("*mamba/wdt/w",           ("fsdp", "model")),
+    ("*mamba/out/w",           ("model", "fsdp")),
+    ("*mamba/conv_w",          (None, "model")),
+    ("*mamba/A_log",           ("model",)),
+    ("*mamba/D",               ("model",)),
+    ("*mamba/dt_bias",         ("model",)),
+    ("*mamba/norm_y/scale",    ("model",)),
+    # rwkv6
+    ("*rwkv/w?/w",             ("fsdp", "model")),   # wr wk wv wg
+    ("*rwkv/out/w",            ("model", "fsdp")),
+    ("*rwkv/decay_w1",         ("fsdp", None)),
+    ("*rwkv/decay_w2",         (None, "model")),
+    ("*rwkv/decay_bias",       ("model",)),
+    ("*rwkv/u",                ("model", None)),
+    ("*rwkv/ln_y/scale",       ("model",)),
+    ("*cmix/wk/w",             ("fsdp", "model")),
+    ("*cmix/wv/w",             ("model", "fsdp")),
+    ("*cmix/wr/w",             ("fsdp", "model")),
+    # norms and everything else: replicated
+    ("*",                      None),
+]
+
+
+def _match_spec(path: str, shape: tuple, stacked: bool) -> P:
+    rules = current_rules() or AxisRules()
+    n_dims = len(shape)
+    for pat, axes in PARAM_RULES:
+        if fnmatch.fnmatch(path, pat):
+            if axes is None:
+                return P()
+            logical = list(axes)
+            if stacked:
+                logical = [None] + logical  # scan-stacked blocks dim
+            # trailing unspecified dims -> replicated
+            while len(logical) < n_dims:
+                logical.append(None)
+            return P(*[rules.physical_for_dim(a, shape[i])
+                       for i, a in enumerate(logical[:n_dims])])
+    return P()
+
+
+def param_specs(params, stacked_prefixes=("blocks", "enc_blocks")) -> dict:
+    """PartitionSpec pytree matching ``params`` by path patterns."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for keypath, leaf in flat:
+        parts = [getattr(k, "key", getattr(k, "idx", None)) for k in keypath]
+        path = "/".join(str(p) for p in parts)
+        stacked = any(path.startswith(pfx) for pfx in stacked_prefixes)
+        specs.append(_match_spec(path, tuple(leaf.shape), stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(global_batch: int, mesh) -> P:
+    """Pick the largest batch-sharding axis combo that divides B."""
+    names = [n for n in ("pod", "data") if n in mesh.shape]
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    if names and global_batch % size == 0:
+        return P(tuple(names) if len(names) > 1 else names[0])
+    if "data" in mesh.shape and global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)

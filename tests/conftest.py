@@ -1,0 +1,14 @@
+import os
+
+# Tests run with the real single CPU device; the dry-run (and only the
+# dry-run) sets --xla_force_host_platform_device_count=512 inside its own
+# process.  Keep JAX quiet and deterministic here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("REPRO_TIME_SCALE", "0.0")  # pure accounting, no sleeps
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def tmp_root(tmp_path):
+    return str(tmp_path)

@@ -1,0 +1,39 @@
+"""§8 auto-tuned concurrency: the probing controller must complete the
+transfer and explore beyond the starting concurrency."""
+
+import os
+
+from repro.core import Endpoint, TransferOptions, TransferService
+from repro.core.clock import Clock
+from repro.connectors import MemoryConnector, PosixConnector
+
+
+def test_autotune_completes_and_probes(tmp_path):
+    from repro.core import Credential, CredentialStore
+    from repro.connectors import ObjectStoreConnector, make_cloud
+
+    clock = Clock(scale=0.2)
+    creds = CredentialStore()
+    svc = TransferService(credential_store=creds,
+                          marker_root=os.path.join(str(tmp_path), "m"),
+                          clock=clock)
+    src = PosixConnector(os.path.join(str(tmp_path), "src"))
+    n_files = 96
+    payload = os.urandom(512 * 1024)
+    for i in range(n_files):
+        p = os.path.join(str(tmp_path), "src", "d", f"f{i:03d}.bin")
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+    s3 = make_cloud("s3", clock=clock)
+    dst = ObjectStoreConnector(s3, placement="cloud", clock=clock)
+    creds.register(dst.name, Credential("s3-keypair", {}))
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", dst.name),
+                      TransferOptions(concurrency=1, auto_tune=True,
+                                      max_concurrency=8,
+                                      startup_cost=0.0), sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert task.stats.files_done == n_files
+    # the §8 probing loop must have explored upward from cc=1
+    tune_events = [m for _, m in task.events if "auto-tune" in m]
+    assert task.stats.effective_concurrency > 1 or tune_events, task.events

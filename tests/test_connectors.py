@@ -1,0 +1,215 @@
+"""Connector-interface conformance tests (paper §3 semantics), run
+against every implementation through the same harness."""
+
+import os
+
+import pytest
+
+from repro.core import Credential, NotFound, checksum_bytes
+from repro.core.clock import Clock
+from repro.core.connector import iter_files
+from repro.connectors import (MemoryConnector, ObjectStoreConnector,
+                              PosixConnector, make_cloud)
+from repro.connectors.cloud import NativeClient
+
+
+def _mk_posix(tmp_path):
+    return PosixConnector(os.path.join(str(tmp_path), "posix")), None
+
+
+def _mk_memory(tmp_path):
+    return MemoryConnector(), None
+
+
+def _mk_s3_local(tmp_path):
+    clock = Clock(scale=0.0)
+    storage = make_cloud("s3", clock=clock)
+    cred = Credential("s3-keypair", {"access_key": "AK", "secret": "SK"})
+    return ObjectStoreConnector(storage, placement="local", clock=clock), cred
+
+
+def _mk_drive_cloud(tmp_path):
+    clock = Clock(scale=0.0)
+    storage = make_cloud("drive", clock=clock, quota_rate=10_000,
+                         quota_burst=100_000, consistency_delay=0.0)
+    cred = Credential("oauth2-token", {"token": "ya29.x"})
+    return ObjectStoreConnector(storage, placement="cloud", clock=clock), cred
+
+
+FACTORIES = {
+    "posix": _mk_posix,
+    "memory": _mk_memory,
+    "s3-local": _mk_s3_local,
+    "drive-cloud": _mk_drive_cloud,
+}
+
+
+class SinkChannel:
+    """Collects Send output (test-side AppChannel)."""
+
+    def __init__(self, blocksize=7_001, concurrency=3):
+        self.blocks = {}
+        self.bs = blocksize
+        self.cc = concurrency
+        self._claim = 0
+        self._size = None
+        import threading
+        self._lock = threading.Lock()
+
+    def set_size(self, size):
+        self._size = size
+
+    def write(self, offset, data):
+        with self._lock:
+            self.blocks[offset] = data
+
+    def read(self, offset, length):
+        raise NotImplementedError
+
+    def get_concurrency(self):
+        return self.cc
+
+    def get_blocksize(self):
+        return self.bs
+
+    def get_read_range(self):
+        from repro.core.connector import ByteRange
+        with self._lock:
+            if self._size is not None and self._claim >= self._size:
+                return None
+            ln = self.bs if self._size is None else min(self.bs, self._size - self._claim)
+            rng = ByteRange(self._claim, ln)
+            self._claim += ln
+            return rng
+
+    def bytes_written(self, offset, length):
+        pass
+
+    def finished(self, error=None):
+        self.error = error
+
+    def data(self):
+        return b"".join(self.blocks[o] for o in sorted(self.blocks))
+
+
+class SourceChannel:
+    """Feeds Recv input (test-side AppChannel)."""
+
+    def __init__(self, payload: bytes, blocksize=5_003, concurrency=2):
+        self.payload = payload
+        self.bs = blocksize
+        self.cc = concurrency
+        self._claim = 0
+        self.written = []
+        import threading
+        self._lock = threading.Lock()
+
+    def write(self, offset, data):
+        raise NotImplementedError
+
+    def read(self, offset, length):
+        return self.payload[offset:offset + length]
+
+    def get_concurrency(self):
+        return self.cc
+
+    def get_blocksize(self):
+        return self.bs
+
+    def get_read_range(self):
+        from repro.core.connector import ByteRange
+        with self._lock:
+            if self._claim >= len(self.payload):
+                return None
+            ln = min(self.bs, len(self.payload) - self._claim)
+            rng = ByteRange(self._claim, ln)
+            self._claim += ln
+            return rng
+
+    def bytes_written(self, offset, length):
+        self.written.append((offset, length))
+
+    def finished(self, error=None):
+        pass
+
+
+@pytest.fixture(params=sorted(FACTORIES))
+def conn(request, tmp_path):
+    connector, cred = FACTORIES[request.param](tmp_path)
+    session = connector.start(cred)
+    yield connector, session
+    connector.destroy(session)
+
+
+def test_roundtrip(conn):
+    connector, session = conn
+    payload = bytes(range(256)) * 1000 + b"tail"
+    connector.recv(session, "a/b/file.bin", SourceChannel(payload))
+    info = connector.stat(session, "a/b/file.bin")
+    assert info.size == len(payload)
+    sink = SinkChannel()
+    connector.send(session, "a/b/file.bin", sink)
+    assert sink.data() == payload
+
+
+def test_stat_missing_raises(conn):
+    connector, session = conn
+    with pytest.raises(NotFound):
+        connector.stat(session, "no/such/object")
+
+
+def test_listdir_and_recursive_expand(conn):
+    connector, session = conn
+    for name in ("d/x.bin", "d/sub/y.bin", "d/sub/z.bin"):
+        connector.recv(session, name, SourceChannel(b"payload-" + name.encode()))
+    names = {s.name for s in connector.listdir(session, "d")}
+    assert any(n.endswith("x.bin") for n in names)
+    files = sorted(fi.name for fi in iter_files(connector, session, "d"))
+    assert len(files) == 3
+    assert any(f.endswith("y.bin") for f in files)
+
+
+def test_delete_and_rename(conn):
+    connector, session = conn
+    connector.recv(session, "f1", SourceChannel(b"abc123"))
+    connector.command(session, "rename", "f1", to="f2")
+    assert connector.stat(session, "f2").size == 6
+    connector.command(session, "delete", "f2")
+    with pytest.raises(NotFound):
+        connector.stat(session, "f2")
+
+
+def test_server_side_checksum(conn):
+    connector, session = conn
+    payload = b"integrity" * 4096
+    connector.recv(session, "c.bin", SourceChannel(payload))
+    assert connector.checksum(session, "c.bin", "sha256") == \
+        checksum_bytes(payload, "sha256")
+
+
+def test_posix_path_escape_rejected(tmp_path):
+    connector, _ = _mk_posix(tmp_path)
+    session = connector.start(None)
+    from repro.core.errors import PermanentError
+    with pytest.raises(PermanentError):
+        connector.stat(session, "../../etc/passwd")
+
+
+def test_cloud_requires_credential(tmp_path):
+    clock = Clock(scale=0.0)
+    storage = make_cloud("s3", clock=clock)
+    connector = ObjectStoreConnector(storage, placement="local", clock=clock)
+    from repro.core.errors import AuthError
+    with pytest.raises(AuthError):
+        connector.start(None)
+    with pytest.raises(AuthError):
+        connector.start(Credential("oauth2-token", {}))
+
+
+def test_native_client_roundtrip(tmp_path):
+    clock = Clock(scale=0.0)
+    storage = make_cloud("gcs", clock=clock)
+    client = NativeClient(storage, clock=clock)
+    client.login()
+    client.upload_bytes(b"hello cloud", "k1")
+    assert client.download_bytes("k1") == b"hello cloud"

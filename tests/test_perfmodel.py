@@ -1,0 +1,105 @@
+"""Performance-model tests (paper §5): the regression machinery must
+recover known model parameters from synthetic and emulated data."""
+
+import math
+import random
+
+import pytest
+
+from repro.core.perfmodel import (Advisor, PerfModel, Route, fit_linear,
+                                  fit_perf_model, fit_startup_cost, pearson)
+
+GB = 1e9
+
+
+def test_fit_linear_exact():
+    xs = [1, 2, 3, 4]
+    ys = [3.0 + 0.5 * x for x in xs]
+    a, b = fit_linear(xs, ys)
+    assert math.isclose(a, 3.0, rel_tol=1e-9)
+    assert math.isclose(b, 0.5, rel_tol=1e-9)
+
+
+def test_fit_linear_recovers_under_noise():
+    rng = random.Random(0)
+    t0, alpha = 0.12, 17.0
+    xs = [50, 100, 200, 400, 600, 800, 1000]  # paper's N values
+    ys = [alpha + t0 * x + rng.gauss(0, 0.5) for x in xs]
+    a, b = fit_linear(xs, ys)
+    assert abs(b - t0) < 0.02
+    assert abs(a - alpha) < 8.0
+
+
+def test_pearson_bounds_and_signs():
+    xs = list(range(10))
+    assert pearson(xs, xs) == pytest.approx(1.0)
+    assert pearson(xs, [-x for x in xs]) == pytest.approx(-1.0)
+    assert abs(pearson(xs, [1, -1] * 5)) < 0.5
+    assert pearson(xs, [5.0] * 10) == 0.0
+
+
+def test_fit_perf_model_roundtrip():
+    t0, R, S0, B = 0.25, 500e6, 2.3, 5 * GB
+    xs = [50, 100, 200, 400, 800]
+    ys = [x * t0 + B / R + S0 for x in xs]
+    m = fit_perf_model("syn/upload", xs, ys, int(B), s0=S0)
+    assert m.t0 == pytest.approx(t0, rel=1e-6)
+    assert m.throughput == pytest.approx(R, rel=1e-6)
+    assert m.rho > 0.999  # paper Table 1: ~0.99 everywhere
+    # prediction at unseen N, with concurrency overlapping t0
+    assert m.predict(600, int(B)) == pytest.approx(600 * t0 + B / R + S0, rel=1e-6)
+    assert m.predict(600, int(B), concurrency=4) < m.predict(600, int(B))
+
+
+def test_fit_startup_cost_eq6():
+    s0, tu = 2.3, 1.7  # paper Fig. 12: S0 = 2.3 s
+    sizes = [g * GB for g in range(1, 20, 2)]
+    times = [s0 + tu * b / GB for b in sizes]
+    got_s0, got_tu = fit_startup_cost(sizes, times)
+    assert got_s0 == pytest.approx(s0, rel=1e-6)
+    assert got_tu * GB == pytest.approx(tu, rel=1e-6)
+
+
+def _mk_model(route, t0, R, s0=2.3, B=5 * GB):
+    return PerfModel(route=route, t0=t0, alpha=B / R + s0, bytes_total=int(B),
+                     s0=s0)
+
+
+def test_advisor_prefers_cloud_placement_for_small_files():
+    """Paper §8.1: near-storage placement wins for many-small-files."""
+    adv = Advisor()
+    adv.add(Route("conn-local", _mk_model("l", t0=0.45, R=420e6)))
+    adv.add(Route("conn-cloud", _mk_model("c", t0=0.08, R=480e6)))
+    route, cc, t = adv.best(n_files=1000, nbytes=int(1 * GB))
+    assert route.name == "conn-cloud"
+    assert cc >= 1
+    # single big file: difference is marginal; both acceptable, but
+    # prediction must monotonically improve with fewer files
+    t_many = route.model.predict(1000, int(1 * GB))
+    t_one = route.model.predict(1, int(1 * GB))
+    assert t_one < t_many
+
+
+def test_advisor_concurrency_ladder():
+    adv = Advisor()
+    adv.add(Route("r", _mk_model("r", t0=0.5, R=500e6), max_concurrency=16))
+    route, cc, t = adv.best(n_files=1000, nbytes=int(1 * GB))
+    assert cc == 16  # pure t0-dominated workload maxes out concurrency
+
+
+def test_coalesce_advice_shrinks_file_count():
+    adv = Advisor()
+    adv.add(Route("r", _mk_model("r", t0=0.5, R=500e6)))
+    n = adv.coalesce_advice(n_files=10_000, nbytes=int(5 * GB))
+    assert 1 <= n < 10_000
+    # with zero per-file overhead there is nothing to coalesce
+    adv2 = Advisor()
+    adv2.add(Route("r0", _mk_model("r0", t0=0.0, R=500e6)))
+    assert adv2.coalesce_advice(64, int(1 * GB)) == 64
+
+
+def test_degenerate_inputs_raise():
+    with pytest.raises(ValueError):
+        fit_linear([1], [2])
+    with pytest.raises(ValueError):
+        fit_linear([3, 3, 3], [1, 2, 3])

@@ -1,0 +1,102 @@
+"""Hypothesis property tests over the connector/transfer invariants."""
+
+import os
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.connector import ByteRange
+from repro.core.integrity import checksum_bytes, hasher
+from repro.core.perfmodel import fit_linear, pearson
+from repro.core.transfer import _holes, _merge_ranges
+from repro.connectors.memory import BlobDict
+
+RANGES = st.lists(
+    st.tuples(st.integers(0, 1 << 20), st.integers(1, 1 << 16)), max_size=24)
+
+
+@given(RANGES)
+def test_merge_ranges_invariants(pairs):
+    merged = _merge_ranges([[o, l] for o, l in pairs])
+    # sorted, non-overlapping, non-adjacent
+    for (o1, l1), (o2, l2) in zip(merged, merged[1:]):
+        assert o1 + l1 < o2
+    # coverage is preserved
+    want = set()
+    for o, l in pairs:
+        want.add(o)
+        want.add(o + l - 1)
+    for point in want:
+        covered_in = any(o <= point < o + l for o, l in pairs)
+        covered_out = any(o <= point < o + l for o, l in merged)
+        assert covered_in == covered_out
+
+
+@given(st.integers(1, 1 << 20), RANGES)
+def test_holes_partition_the_file(size, pairs):
+    done = [[o, min(l, max(0, size - o))] for o, l in pairs if o < size]
+    done = [d for d in done if d[1] > 0]
+    holes = _holes(size, done)
+    # holes and done together tile [0, size) exactly, without overlap
+    covered = sorted([(o, l) for o, l in _merge_ranges(done)] +
+                     [(h.offset, h.length) for h in holes])
+    at = 0
+    for o, l in covered:
+        assert o == at
+        at = o + l
+    assert at == size
+
+
+@given(st.binary(max_size=4096), st.sampled_from(
+    ["sha256", "md5", "crc32", "fletcher64"]))
+def test_checksum_deterministic_and_incremental(data, alg):
+    whole = checksum_bytes(data, alg)
+    h = hasher(alg)
+    third = max(1, len(data) // 3)
+    for i in range(0, len(data), third):
+        h.update(data[i:i + third])
+    assert h.hexdigest() == whole
+
+
+@given(st.binary(min_size=1, max_size=2048), st.binary(min_size=1, max_size=2048))
+def test_checksum_collision_resistance_smoke(a, b):
+    if a != b:
+        assert checksum_bytes(a, "sha256") != checksum_bytes(b, "sha256")
+
+
+@given(st.binary(max_size=8192), st.integers(1, 64),
+       st.randoms(use_true_random=False))
+def test_blobdict_out_of_order_range_assembly(payload, nblocks, rnd):
+    """Out-of-order positional writes (OOO GridFTP blocks) must
+    reassemble to the exact original object."""
+    store = BlobDict()
+    n = len(payload)
+    blocks = []
+    step = max(1, n // nblocks)
+    for off in range(0, n, step):
+        blocks.append((off, payload[off:off + step]))
+    rnd.shuffle(blocks)
+    for off, data in blocks:
+        store.put_range("k", off, data)
+    if n:
+        assert store.get("k") == payload
+
+
+@given(st.lists(st.floats(-1e6, 1e6), min_size=3, max_size=50, unique=True),
+       st.floats(-100, 100), st.floats(-1e3, 1e3))
+@settings(suppress_health_check=[HealthCheck.filter_too_much])
+def test_fit_linear_is_exact_on_linear_data(xs, beta, alpha):
+    ys = [alpha + beta * x for x in xs]
+    a, b = fit_linear(xs, ys)
+    scale = max(1.0, abs(alpha), abs(beta))
+    assert abs(a - alpha) / scale < 1e-3
+    assert abs(b - beta) / scale < 1e-3
+
+
+@given(st.lists(st.tuples(st.floats(-1e3, 1e3), st.floats(-1e3, 1e3)),
+                min_size=2, max_size=64))
+def test_pearson_in_unit_interval(pairs):
+    xs = [p[0] for p in pairs]
+    ys = [p[1] for p in pairs]
+    rho = pearson(xs, ys)
+    assert -1.0 - 1e-9 <= rho <= 1.0 + 1e-9

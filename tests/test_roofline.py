@@ -1,0 +1,78 @@
+"""Roofline machinery: HLO collective parsing + blockwise extrapolation."""
+
+import pytest
+
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.analysis import extrapolate
+
+HLO_SAMPLE = """
+HloModule jit_step
+%region { ... }
+ENTRY %main {
+  %ar = f32[1024,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%region
+  %ag = bf16[512,32]{1,0} all-gather(%y), channel_id=2, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %rs = f32[64,4]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[16,16]<=[256], dimensions={0}, to_apply=%region
+  %a2a = f32[128]{0} all-to-all(%w), channel_id=4, replica_groups=[32,8]<=[256]
+  %cp = u32[16,16]{1,0} collective-permute(%v), channel_id=5, source_target_pairs={{0,1}}
+  %ard = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce(%p, %q), channel_id=6, replica_groups=[16,16]<=[256], to_apply=%region
+  %as = f32[4,4]{1,0} all-reduce-start(%m), channel_id=7, replica_groups=[16,16]<=[256], to_apply=%region
+  %ad = f32[4,4]{1,0} all-reduce-done(%as)
+}
+"""
+
+
+def test_collective_parse_counts_and_bytes():
+    info = collective_bytes(HLO_SAMPLE)
+    assert info["count"]["all-reduce"] == 3     # ar + tuple + start
+    assert info["count"]["all-gather"] == 1
+    assert info["count"]["reduce-scatter"] == 1
+    assert info["count"]["all-to-all"] == 1
+    assert info["count"]["collective-permute"] == 1
+    assert info["by_op"]["all-reduce"] == (1024 * 8 * 4 + 2 * 8 * 8 * 4
+                                           + 4 * 4 * 4)
+    assert info["by_op"]["all-gather"] == 512 * 32 * 2
+    # reduce-scatter scaled by group size (16)
+    assert info["by_op"]["reduce-scatter"] == 64 * 4 * 4 * 16
+    assert info["by_op"]["collective-permute"] == 16 * 16 * 4
+    assert info["total"] == sum(info["by_op"].values())
+
+
+def test_collective_parse_skips_done():
+    done_only = "%ad = f32[4,4]{1,0} all-reduce-done(%as)"
+    assert collective_bytes(done_only)["total"] == 0
+
+
+def test_extrapolate_linear():
+    c1 = {"flops": 10.0, "bytes": 100.0,
+          "coll": {"total": 7, "by_op": {"all-reduce": 7},
+                   "count": {"all-reduce": 2}}}
+    c2 = {"flops": 16.0, "bytes": 130.0,
+          "coll": {"total": 10, "by_op": {"all-reduce": 10},
+                   "count": {"all-reduce": 3}}}
+    out = extrapolate(c1, c2, n_blocks=5)
+    assert out["flops"] == 10 + 4 * 6
+    assert out["bytes"] == 100 + 4 * 30
+    assert out["coll"]["by_op"]["all-reduce"] == 7 + 4 * 3
+    assert out["coll"]["count"]["all-reduce"] == 2 + 4 * 1
+
+
+def test_extrapolate_clamps_negative_marginals():
+    c1 = {"flops": 10.0, "bytes": 100.0,
+          "coll": {"total": 5, "by_op": {}, "count": {}}}
+    c2 = {"flops": 8.0, "bytes": 90.0,
+          "coll": {"total": 5, "by_op": {}, "count": {}}}
+    out = extrapolate(c1, c2, n_blocks=10)
+    assert out["flops"] == 10.0   # never extrapolates downward
+    assert out["bytes"] == 100.0
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config
+    from repro.models.common import SHAPES
+    from repro.roofline.analysis import model_flops
+    cfg = get_config("dbrx-132b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    # 132B total but ~36B active -> 6*N_active*D
+    tokens = 256 * 4096
+    assert mf < 6 * 60e9 * tokens
+    assert mf > 6 * 25e9 * tokens

@@ -1,0 +1,263 @@
+"""Managed transfer-service behaviour (paper §2.2, §3, §7)."""
+
+import os
+import threading
+
+import pytest
+
+from repro.core import (Credential, CredentialStore, Endpoint,
+                        TransferOptions, TransferService, checksum_bytes)
+from repro.core.clock import Clock
+from repro.core.transfer import MarkerStore, _holes, _merge_ranges
+from repro.core.connector import ByteRange
+from repro.connectors import (MemoryConnector, ObjectStoreConnector,
+                              PosixConnector, make_cloud)
+
+MB = 1024 * 1024
+
+
+def make_service(tmp_path, clock=None):
+    store = CredentialStore()
+    return TransferService(credential_store=store,
+                           marker_root=os.path.join(str(tmp_path), "markers"),
+                           clock=clock or Clock(scale=0.0)), store
+
+
+def seeded_posix(tmp_path, files):
+    root = os.path.join(str(tmp_path), "src")
+    conn = PosixConnector(root)
+    for name, payload in files.items():
+        p = os.path.join(root, name)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+    return conn
+
+
+def test_single_file_transfer(tmp_path):
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(3 * MB + 17)
+    src = seeded_posix(tmp_path, {"data.bin": payload})
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "data.bin"), Endpoint(dst, "out/data.bin"),
+                      TransferOptions(blocksize=256 * 1024), sync=True)
+    assert task.status == task.SUCCEEDED, task.events
+    s = dst.start(None)
+    assert dst.store.get("out/data.bin") == payload
+    assert task.stats.bytes_done == len(payload)
+
+
+def test_directory_transfer_expansion(tmp_path):
+    svc, creds = make_service(tmp_path)
+    files = {f"d/sub{i}/f{j}.bin": os.urandom(10_000 + i * j)
+             for i in range(3) for j in range(4)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "mirror"),
+                      TransferOptions(concurrency=4), sync=True)
+    assert task.status == task.SUCCEEDED
+    assert task.stats.files_done == 12
+    for name, payload in files.items():
+        key = "mirror/" + name[len("d/"):]
+        assert dst.store.get(key) == payload
+
+
+def test_third_party_cloud_to_cloud(tmp_path):
+    """Inter-cloud transfer (paper §6.5): client never in the data path."""
+    clock = Clock(scale=0.0)
+    svc, creds = make_service(tmp_path, clock)
+    s3 = make_cloud("s3", clock=clock)
+    gcs = make_cloud("gcs", clock=clock)
+    src_conn = ObjectStoreConnector(s3, placement="cloud", clock=clock)
+    dst_conn = ObjectStoreConnector(gcs, placement="cloud", clock=clock)
+    creds.register("ep-s3", Credential("s3-keypair", {"access_key": "A"}))
+    creds.register("ep-gcs", Credential("oauth2-token", {"token": "t"}))
+    payload = os.urandom(2 * MB)
+    s3.blobs.put("bucket/obj", payload)
+    task = svc.submit(Endpoint(src_conn, "bucket/obj", "ep-s3"),
+                      Endpoint(dst_conn, "dst-bucket/obj", "ep-gcs"),
+                      TransferOptions(), sync=True)
+    assert task.status == task.SUCCEEDED, task.events
+    assert gcs.blobs.get("dst-bucket/obj") == payload
+
+
+def test_integrity_checking_end_to_end(tmp_path):
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(1 * MB + 3)
+    src = seeded_posix(tmp_path, {"x.bin": payload})
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "x.bin"), Endpoint(dst, "x.bin"),
+                      TransferOptions(integrity=True), sync=True)
+    assert task.status == task.SUCCEEDED
+    assert task.files[-1].checksum == checksum_bytes(payload, "sha256")
+
+
+class CorruptingConnector(MemoryConnector):
+    """Flips a byte on the first N writes to a path (silent corruption,
+    paper §7)."""
+
+    def __init__(self, n_corrupt=1):
+        super().__init__()
+        self.n_corrupt = n_corrupt
+        self._count = 0
+        self._lock = threading.Lock()
+
+    def recv(self, session, path, channel):
+        super().recv(session, path, channel)
+        with self._lock:
+            if self._count < self.n_corrupt:
+                self._count += 1
+                key = self._key(path)
+                data = bytearray(self.store.get(key))
+                data[len(data) // 2] ^= 0xFF
+                self.store.put(key, bytes(data))
+
+
+def test_integrity_detects_and_repairs_corruption(tmp_path):
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(512 * 1024)
+    src = seeded_posix(tmp_path, {"y.bin": payload})
+    dst = CorruptingConnector(n_corrupt=1)
+    task = svc.submit(Endpoint(src, "y.bin"), Endpoint(dst, "y.bin"),
+                      TransferOptions(integrity=True), sync=True)
+    assert task.status == task.SUCCEEDED
+    assert task.stats.integrity_failures == 1
+    s = dst.start(None)
+    assert dst.store.get("y.bin") == payload
+
+
+def test_integrity_gives_up_after_budget(tmp_path):
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(64 * 1024)
+    src = seeded_posix(tmp_path, {"z.bin": payload})
+    dst = CorruptingConnector(n_corrupt=99)
+    task = svc.submit(Endpoint(src, "z.bin"), Endpoint(dst, "z.bin"),
+                      TransferOptions(integrity=True, max_integrity_retries=2),
+                      sync=True)
+    assert task.status == task.FAILED
+    assert task.stats.files_failed == 1
+
+
+def test_transient_fault_retry(tmp_path):
+    """API-quota faults are retried automatically (paper §4: Drive/Box
+    call quotas handled 'through automatic retries')."""
+    clock = Clock(scale=0.0)
+    svc, creds = make_service(tmp_path, clock)
+
+    fails = {"n": 0}
+
+    def fault_plan(op, idx):
+        if op == "put_part" and fails["n"] < 3:
+            fails["n"] += 1
+            return True
+        return False
+
+    drive = make_cloud("drive", clock=clock, quota_rate=10_000,
+                       quota_burst=100_000, consistency_delay=0.0)
+    drive.fault_plan = fault_plan
+    dst_conn = ObjectStoreConnector(drive, placement="local", clock=clock)
+    creds.register("ep-drive", Credential("oauth2-token", {"token": "t"}))
+    payload = os.urandom(128 * 1024)
+    src = seeded_posix(tmp_path, {"w.bin": payload})
+    task = svc.submit(Endpoint(src, "w.bin"),
+                      Endpoint(dst_conn, "folder/w.bin", "ep-drive"),
+                      TransferOptions(retry_backoff=0.001), sync=True)
+    assert task.status == task.SUCCEEDED, task.events
+    assert task.stats.faults_retried == 3
+    assert drive.blobs.get("folder/w.bin") == payload
+
+
+def test_retries_exhausted_marks_failed(tmp_path):
+    clock = Clock(scale=0.0)
+    svc, creds = make_service(tmp_path, clock)
+    s3 = make_cloud("s3", clock=clock)
+    s3.fault_plan = lambda op, idx: op == "put_part"
+    dst_conn = ObjectStoreConnector(s3, placement="local", clock=clock)
+    creds.register("ep", Credential("s3-keypair", {}))
+    src = seeded_posix(tmp_path, {"f.bin": b"x" * 1024})
+    task = svc.submit(Endpoint(src, "f.bin"), Endpoint(dst_conn, "f.bin", "ep"),
+                      TransferOptions(max_retries=2, retry_backoff=0.001),
+                      sync=True)
+    assert task.status == task.FAILED
+    assert task.stats.faults_retried >= 2
+
+
+def test_restart_marker_resume(tmp_path):
+    """Kill mid-transfer; resume must complete byte-exact without
+    re-sending completed ranges (paper §3 'holey' transfers)."""
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(4 * MB)
+    src = seeded_posix(tmp_path, {"big.bin": payload})
+    dst = MemoryConnector()
+
+    # simulate prior partial progress: first half already transferred
+    task_id = "resume-test"
+    state = {"files": {"big.bin": {"done": [[0, 2 * MB]], "complete": False}}}
+    svc.markers.save(task_id, state)
+    dst.store.put_range("big.bin", 0, payload[:2 * MB])
+
+    sent = {"bytes": 0}
+    orig = PosixConnector.send
+
+    def counting_send(self, session, path, channel):
+        class Wrap:
+            def __init__(w, inner):
+                w.inner = inner
+
+            def __getattr__(w, k):
+                return getattr(w.inner, k)
+
+            def write(w, offset, data):
+                sent["bytes"] += len(data)
+                w.inner.write(offset, data)
+
+        return orig(self, session, path, Wrap(channel))
+
+    PosixConnector.send = counting_send
+    try:
+        task = svc.submit(Endpoint(src, "big.bin"), Endpoint(dst, "big.bin"),
+                          TransferOptions(), task_id=task_id, sync=True)
+    finally:
+        PosixConnector.send = orig
+    assert task.status == task.SUCCEEDED
+    assert sent["bytes"] == 2 * MB  # only the hole was re-sent
+    assert dst.store.get("big.bin") == payload
+    # marker is cleared on success
+    assert svc.markers.load(task_id) == {"files": {}}
+
+
+def test_completed_files_skipped_on_resume(tmp_path):
+    svc, creds = make_service(tmp_path)
+    files = {f"d/f{i}.bin": os.urandom(8192) for i in range(4)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    task_id = "skip-test"
+    state = {"files": {"d/f0.bin": {"done": [[0, 8192]], "complete": True}}}
+    svc.markers.save(task_id, state)
+    dst.store.put("out/f0.bin", files["d/f0.bin"])
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(), task_id=task_id, sync=True)
+    assert task.status == task.SUCCEEDED
+    assert task.stats.files_done == 4
+    for i in range(4):
+        assert dst.store.get(f"out/f{i}.bin") == files[f"d/f{i}.bin"]
+
+
+def test_fire_and_forget_async(tmp_path):
+    svc, creds = make_service(tmp_path)
+    payload = os.urandom(MB)
+    src = seeded_posix(tmp_path, {"a.bin": payload})
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "a.bin"), Endpoint(dst, "a.bin"))
+    assert task.wait(timeout=30)
+    assert task.status == task.SUCCEEDED
+    assert dst.store.get("a.bin") == payload
+
+
+def test_merge_ranges_and_holes():
+    assert _merge_ranges([[0, 10], [10, 5], [20, 5]]) == [[0, 15], [20, 5]]
+    assert _merge_ranges([[5, 5], [0, 5]]) == [[0, 10]]
+    holes = _holes(100, [[0, 20], [50, 10]])
+    assert holes == [ByteRange(20, 30), ByteRange(60, 40)]
+    assert _holes(10, []) == [ByteRange(0, 10)]
+    assert _holes(10, [[0, 10]]) == []
