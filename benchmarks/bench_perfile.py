@@ -1,6 +1,13 @@
 """Paper §5 / Figs. 6-11 + Table 1: transfer time vs number of files at
 fixed total size; OLS regression -> per-file overhead t0 and network
-efficiency alpha; Pearson rho validates linearity."""
+efficiency alpha; Pearson rho validates linearity.
+
+Each Connector route is fitted twice: once on the per-file path (the
+paper's setting) and once with small-file coalescing enabled
+(``coalesce_threshold`` + Connector bulk data plane), so the per-file
+overhead reduction from batching is tracked as ``t0`` vs ``t0_batched``
+per route (see ``BENCH_perfile.json`` emitted by ``benchmarks.run``).
+"""
 
 from __future__ import annotations
 
@@ -9,7 +16,7 @@ import tempfile
 from repro.core import TransferOptions
 from repro.core.perfmodel import fit_perf_model
 
-from .common import (DATASET_LARGE, DATASET_SMALL, QUICK, emit, make_env,
+from .common import (DATASET_LARGE, DATASET_SMALL, MB, QUICK, emit, make_env,
                      seed_bucket, seed_local_files, split_dataset,
                      transfer_model_seconds, native_upload_seconds,
                      native_download_seconds, Endpoint)
@@ -27,6 +34,15 @@ MATRIX = {
     "ceph": (DATASET_LARGE, True),
 }
 
+#: the two data-plane modes fitted per Connector route.  The batched
+#: mode raises the coalescing threshold above every per-file size in
+#: the sweep so the whole transfer rides the bulk API.
+MODES = {
+    "": dict(concurrency=1, parallelism=4, coalesce_threshold=0),
+    "+batch": dict(concurrency=1, parallelism=4,
+                   coalesce_threshold=512 * MB, max_batch_files=256),
+}
+
 
 def _routes_for(env, provider, has_cloud):
     storage, conn_local = env.cloud(provider, "local")
@@ -40,13 +56,13 @@ def _routes_for(env, provider, has_cloud):
 
 
 def run(full: bool = True) -> dict:
-    """Returns {route: PerfModel}; emits one CSV row per fitted model."""
+    """Returns {route: PerfModel}; emits one CSV row per fitted model.
+    Routes fitted with batching enabled are keyed ``<route>+batch``."""
     providers = list(MATRIX) if full else ["s3", "drive"]
     models = {}
     pearson_rows = []
     # The paper's §5 regression runs at concurrency 1; with a single
     # stream the virtual clock measures the modeled time exactly.
-    OPTS = dict(concurrency=1, parallelism=4)
     S0_CONN, S0_NATIVE = 2.3, 0.15   # resolved independently in bench_startup
     for provider in providers:
         total, has_cloud = MATRIX[provider]
@@ -57,23 +73,28 @@ def run(full: bool = True) -> dict:
 
             # ---------- uploads (local files -> cloud) ----------
             for route_name, (sto, conn) in routes.items():
-                times = []
-                for n in N_FILES:
-                    parts = split_dataset(total, n)
-                    src = seed_local_files(env, f"up_{provider}_{n}", parts)
-                    t = transfer_model_seconds(
-                        env, Endpoint(env.local, src),
-                        Endpoint(conn, f"bkt/up{n}", conn.name),
-                        TransferOptions(**OPTS))
-                    times.append(t)
-                    sto.blobs._objs.clear()
-                m = fit_perf_model(f"{provider}/{route_name}/up",
-                                   N_FILES, times, total, s0=S0_CONN)
-                models[m.route] = m
-                pearson_rows.append((f"To {provider} ({route_name})", m.rho))
-                emit(f"perfile.{provider}.{route_name}.upload",
-                     times[-1], f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
-                     f" rho={m.rho:.3f}")
+                for mode, opts in MODES.items():
+                    times = []
+                    for n in N_FILES:
+                        parts = split_dataset(total, n)
+                        src = seed_local_files(
+                            env, f"up{mode}_{provider}_{n}", parts)
+                        t = transfer_model_seconds(
+                            env, Endpoint(env.local, src),
+                            Endpoint(conn, f"bkt/up{mode}{n}", conn.name),
+                            TransferOptions(**opts))
+                        times.append(t)
+                        sto.blobs._objs.clear()
+                    m = fit_perf_model(f"{provider}/{route_name}{mode}/up",
+                                       N_FILES, times, total, s0=S0_CONN)
+                    models[m.route] = m
+                    if not mode:  # Table 1 tracks the paper's setting
+                        pearson_rows.append(
+                            (f"To {provider} ({route_name})", m.rho))
+                    emit(f"perfile.{provider}.{route_name}{mode}.upload",
+                         times[-1],
+                         f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
+                         f" rho={m.rho:.3f}")
             # native upload
             times = []
             for n in N_FILES:
@@ -90,22 +111,27 @@ def run(full: bool = True) -> dict:
 
             # ---------- downloads (cloud -> local files) ----------
             for route_name, (sto, conn) in routes.items():
-                times = []
-                for n in N_FILES:
-                    parts = split_dataset(total, n)
-                    seed_bucket(sto, f"down{n}", parts)
-                    t = transfer_model_seconds(
-                        env, Endpoint(conn, f"down{n}", conn.name),
-                        Endpoint(env.local, f"dl_{provider}_{route_name}_{n}"),
-                        TransferOptions(**OPTS))
-                    times.append(t)
-                m = fit_perf_model(f"{provider}/{route_name}/down",
-                                   N_FILES, times, total, s0=S0_CONN)
-                models[m.route] = m
-                pearson_rows.append((f"From {provider} ({route_name})", m.rho))
-                emit(f"perfile.{provider}.{route_name}.download",
-                     times[-1], f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
-                     f" rho={m.rho:.3f}")
+                for mode, opts in MODES.items():
+                    times = []
+                    for n in N_FILES:
+                        parts = split_dataset(total, n)
+                        seed_bucket(sto, f"down{mode}{n}", parts)
+                        t = transfer_model_seconds(
+                            env, Endpoint(conn, f"down{mode}{n}", conn.name),
+                            Endpoint(env.local,
+                                     f"dl{mode}_{provider}_{route_name}_{n}"),
+                            TransferOptions(**opts))
+                        times.append(t)
+                    m = fit_perf_model(f"{provider}/{route_name}{mode}/down",
+                                       N_FILES, times, total, s0=S0_CONN)
+                    models[m.route] = m
+                    if not mode:
+                        pearson_rows.append(
+                            (f"From {provider} ({route_name})", m.rho))
+                    emit(f"perfile.{provider}.{route_name}{mode}.download",
+                         times[-1],
+                         f"t0={m.t0:.3f}s R={m.throughput/1e6:.0f}MB/s"
+                         f" rho={m.rho:.3f}")
             # native download
             times = []
             for n in N_FILES:

@@ -191,3 +191,9 @@ def native_download_seconds(env: Env, client: NativeClient, keys: list[str],
 def emit(name: str, model_seconds: float, derived: str = "") -> None:
     """The runner's required CSV: name,us_per_call,derived."""
     print(f"{name},{model_seconds * 1e6:.0f},{derived}")
+
+
+def batched_route(route: str) -> str:
+    """Map a bench_perfile route key to its batched-data-plane
+    counterpart (single owner of the '+batch' naming scheme)."""
+    return route.replace("/up", "+batch/up").replace("/down", "+batch/down")

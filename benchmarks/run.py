@@ -2,15 +2,44 @@
 benches.  Prints ``name,us_per_call,derived`` CSV rows (us_per_call is
 model-microseconds for emulated-transfer benches; see common.py).
 
+When the ``perfile`` suite runs, the fitted models are also written to
+``BENCH_perfile.json`` (per route: t0, throughput, rho, and — where the
+batched data plane was fitted — t0_batched and the speedup), so the
+per-file-overhead trajectory is tracked across PRs.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+
+def _write_perfile_json(models: dict, path: str = "BENCH_perfile.json") -> None:
+    """Serialize bench_perfile's fitted models, pairing each route with
+    its ``+batch`` counterpart."""
+    from .common import batched_route
+
+    out = {}
+    for route, m in models.items():
+        if "+batch" in route:
+            continue
+        rec = {"t0": m.t0, "alpha": m.alpha, "throughput": m.throughput,
+               "rho": m.rho, "r2": m.r2, "s0": m.s0}
+        batched = models.get(batched_route(route))
+        if batched is not None:
+            rec["t0_batched"] = batched.t0
+            rec["rho_batched"] = batched.rho
+            rec["t0_speedup"] = (m.t0 / batched.t0
+                                 if batched.t0 > 0 else float("inf"))
+        out[route] = rec
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {path} ({len(out)} routes)", file=sys.stderr)
 
 
 def main() -> None:
@@ -44,7 +73,9 @@ def main() -> None:
     t0 = time.monotonic()
     for name in wanted:
         print(f"# --- {name} ---", file=sys.stderr)
-        suites[name]()
+        result = suites[name]()
+        if name == "perfile" and result:
+            _write_perfile_json(result)
     print(f"# total wall: {time.monotonic() - t0:.1f}s", file=sys.stderr)
 
 

@@ -32,11 +32,31 @@ def main():
     bench_integrity.run()
 
     print("\n== §8 best practices, derived from the fitted models ==")
-    adv = Advisor([Route(name, m) for name, m in models.items()])
+    adv = Advisor([Route(name, m) for name, m in models.items()
+                   if "+batch" not in name])
     for n_files, gb in ((1000, 1), (10, 50)):
         route, cc, eta = adv.best(n_files, int(gb * 1e9))
         print(f"  {n_files} files / {gb} GB -> {route.name} cc={cc} "
               f"(predicted {eta:.0f}s)")
+
+    print("\n== small-file regime: coalesced batches (paper §5.3.2/§8) ==")
+    # Eq. 4 says per-file overhead t0 dominates many-small-file
+    # transfers.  The service coalesces files below
+    # TransferOptions.coalesce_threshold into pipelined batches that
+    # share one control exchange and ride the Connector bulk data plane
+    # (send_batch/recv_batch); the Advisor sizes the threshold at the
+    # break-even point size == t0 * R from a fitted model.
+    from benchmarks.common import batched_route
+    for route in adv.routes:
+        batched = models.get(batched_route(route.name))
+        if batched is None or "native" in route.name:
+            continue
+        th = adv.coalesce_threshold(route)
+        speedup = (route.model.t0 / batched.t0
+                   if batched.t0 > 0 else float("inf"))
+        print(f"  {route.name}: t0 {route.model.t0*1e3:.0f}ms -> "
+              f"{batched.t0*1e3:.0f}ms batched ({speedup:.1f}x); "
+              f"coalesce files < {th / 1e6:.1f} MB")
 
 
 if __name__ == "__main__":

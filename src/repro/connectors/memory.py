@@ -182,3 +182,24 @@ class MemoryConnector(Connector):
                 channel.bytes_written(rng.offset + done, len(data))
                 done += len(data)
         channel.finished(None)
+
+    # -- bulk data plane --------------------------------------------------
+    # Zero-latency storage: batching buys file-level overlap on the
+    # session pool, nothing more.  Dispatch stays on self.send/self.recv
+    # so subclasses that wrap the per-file path keep working.
+    def _batch(self, session: Session, paths, channel_factory, op) -> None:
+        session.check()
+
+        def one(path: str, channel: AppChannel) -> None:
+            try:
+                op(session, path, channel)
+            except Exception as e:
+                channel.finished(e)
+
+        self._dispatch_batch(session, paths, channel_factory, one)
+
+    def send_batch(self, session: Session, paths, channel_factory) -> None:
+        self._batch(session, paths, channel_factory, self.send)
+
+    def recv_batch(self, session: Session, paths, channel_factory) -> None:
+        self._batch(session, paths, channel_factory, self.recv)

@@ -1,6 +1,13 @@
 """POSIX Connector — the paper's first and reference implementation
 (Fig. 2).  Translates the Connector interface onto open/read/write/stat
-against a real filesystem subtree."""
+against a real filesystem subtree.
+
+Bulk path: ``send_batch``/``recv_batch`` stream each file on the
+session's shared worker pool (one pool per session, threads reused
+across files and attempts) instead of spawning ``concurrency`` fresh
+threads per file the way the per-file path must; directory listings use
+``os.scandir`` so each entry's stat comes from the directory read
+itself rather than a second syscall per child."""
 
 from __future__ import annotations
 
@@ -55,18 +62,19 @@ class PosixConnector(Connector):
         if not os.path.isdir(p):
             raise NotFound(path)
         out = []
-        for entry in sorted(os.listdir(p)):
-            child = os.path.join(p, entry)
-            st = os.stat(child)
-            out.append(
-                StatInfo(
-                    name=os.path.join(path, entry) if path not in (".", "") else entry,
-                    size=st.st_size,
-                    mtime=st.st_mtime,
-                    is_dir=os.path.isdir(child),
-                    mode=st.st_mode & 0o777,
+        with os.scandir(p) as it:
+            for entry in sorted(it, key=lambda e: e.name):
+                st = entry.stat()
+                out.append(
+                    StatInfo(
+                        name=os.path.join(path, entry.name)
+                        if path not in (".", "") else entry.name,
+                        size=st.st_size,
+                        mtime=st.st_mtime,
+                        is_dir=entry.is_dir(),
+                        mode=st.st_mode & 0o777,
+                    )
                 )
-            )
         return out
 
     def command(self, session: Session, op: str, path: str, **kw) -> None:
@@ -91,6 +99,40 @@ class PosixConnector(Connector):
             raise PermanentError(f"unknown command {op!r}")
 
     # -- data ------------------------------------------------------------
+    def _send_stream(self, p: str, size: int, channel: AppChannel) -> None:
+        """One claim-read-write stream (one open handle per stream)."""
+        with open(p, "rb") as f:
+            while True:
+                rng = channel.get_read_range()
+                if rng is None or rng.offset >= size:
+                    return
+                length = min(rng.length, size - rng.offset)
+                f.seek(rng.offset)
+                data = f.read(length)
+                channel.write(rng.offset, data)
+
+    def _recv_stream(self, f, lock, bs: int, channel: AppChannel) -> None:
+        """One claim-read-write stream into an open positional handle."""
+        while True:
+            rng = channel.get_read_range()
+            if rng is None:
+                return
+            done = 0
+            while done < rng.length:
+                step = min(bs, rng.length - done)
+                data = channel.read(rng.offset + done, step)
+                if not data:
+                    return
+                if lock is not None:
+                    with lock:
+                        f.seek(rng.offset + done)
+                        f.write(data)
+                else:
+                    f.seek(rng.offset + done)
+                    f.write(data)
+                channel.bytes_written(rng.offset + done, len(data))
+                done += len(data)
+
     def send(self, session: Session, path: str, channel: AppChannel) -> None:
         session.check()
         p = self._abs(path)
@@ -105,15 +147,7 @@ class PosixConnector(Connector):
 
         def worker() -> None:
             try:
-                with open(p, "rb") as f:
-                    while True:
-                        rng = channel.get_read_range()
-                        if rng is None or rng.offset >= size:
-                            return
-                        length = min(rng.length, size - rng.offset)
-                        f.seek(rng.offset)
-                        data = f.read(length)
-                        channel.write(rng.offset, data)
+                self._send_stream(p, size, channel)
             except Exception as e:  # pragma: no cover - surfaced below
                 err.append(e)
 
@@ -126,36 +160,25 @@ class PosixConnector(Connector):
         if err:
             raise err[0]
 
-    def recv(self, session: Session, path: str, channel: AppChannel) -> None:
-        session.check()
+    def _open_recv(self, path: str):
         p = self._abs(path)
         os.makedirs(os.path.dirname(p) or self.root, exist_ok=True)
-        bs = channel.get_blocksize()
-        lock = threading.Lock()
-        err: list[Exception] = []
         # Pre-create / truncate once, then positional writes (supports
         # out-of-order + holey restart writes).
         with open(p, "ab"):
             pass
-        f = open(p, "r+b")
+        return open(p, "r+b")
+
+    def recv(self, session: Session, path: str, channel: AppChannel) -> None:
+        session.check()
+        bs = channel.get_blocksize()
+        lock = threading.Lock()
+        err: list[Exception] = []
+        f = self._open_recv(path)
 
         def worker() -> None:
             try:
-                while True:
-                    rng = channel.get_read_range()
-                    if rng is None:
-                        return
-                    done = 0
-                    while done < rng.length:
-                        step = min(bs, rng.length - done)
-                        data = channel.read(rng.offset + done, step)
-                        if not data:
-                            return
-                        with lock:
-                            f.seek(rng.offset + done)
-                            f.write(data)
-                        channel.bytes_written(rng.offset + done, len(data))
-                        done += len(data)
+                self._recv_stream(f, lock, bs, channel)
             except Exception as e:
                 err.append(e)
                 try:  # wake sibling streams blocked on the channel
@@ -175,3 +198,46 @@ class PosixConnector(Connector):
         channel.finished(err[0] if err else None)
         if err:
             raise err[0]
+
+    # -- bulk data plane --------------------------------------------------
+    def send_batch(self, session: Session, paths, channel_factory) -> None:
+        """Native batch Send: one single-stream task per file on the
+        session's shared pool (threads reused across files/attempts);
+        errors contained per file via ``channel.finished``."""
+        session.check()
+
+        def one(path: str, channel: AppChannel) -> None:
+            try:
+                p = self._abs(path)
+                try:
+                    size = os.path.getsize(p)
+                except OSError:
+                    raise NotFound(path) from None
+                if hasattr(channel, "set_size"):
+                    channel.set_size(size)
+                self._send_stream(p, size, channel)
+                channel.finished(None)
+            except Exception as e:
+                channel.finished(e)
+
+        self._dispatch_batch(session, paths, channel_factory, one)
+
+    def recv_batch(self, session: Session, paths, channel_factory) -> None:
+        """Native batch Recv — single stream + private handle per file,
+        no cross-stream handle lock needed."""
+        session.check()
+
+        def one(path: str, channel: AppChannel) -> None:
+            try:
+                f = self._open_recv(path)
+                try:
+                    self._recv_stream(f, None, channel.get_blocksize(), channel)
+                    f.flush()
+                    os.fsync(f.fileno())
+                finally:
+                    f.close()
+                channel.finished(None)
+            except Exception as e:
+                channel.finished(e)
+
+        self._dispatch_batch(session, paths, channel_factory, one)

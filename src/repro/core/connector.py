@@ -19,14 +19,29 @@ the network — only to the AppChannel — exactly as in the paper: "This
 API provides functions for reading and writing data to and from the
 network.  The Connector author is not expected to know the details of
 the application."
+
+Bulk data plane (many-small-files regime, paper §5.3.2/§8)
+----------------------------------------------------------
+``send_batch`` / ``recv_batch`` move a *group* of files through one
+call so a Connector can amortize per-file costs the per-file API cannot:
+request pipelining on a persistent connection, grouped API admission,
+and a reused session-level worker pool instead of a thread per file per
+attempt.  The application hands over a ``channel_factory(path)`` that
+returns the :class:`AppChannel` for each path (or ``None`` to skip it).
+Per-file failures are *contained*: a batch implementation reports a
+file's error through ``channel.finished(error)`` and keeps going, so
+one bad file cannot abort its batch-mates.  The default implementation
+simply falls back to per-file ``send``/``recv``, so every Connector
+supports the bulk API from day one.
 """
 
 from __future__ import annotations
 
 import threading
 from abc import ABC, abstractmethod
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Sequence
+from typing import Callable, Iterable, Iterator, Sequence
 
 from .errors import SessionClosed
 
@@ -126,6 +141,20 @@ class Session:
         if self.closed:
             raise SessionClosed(f"session on {self.connector.name} is closed")
 
+    def worker_pool(self, size: int) -> ThreadPoolExecutor:
+        """Session-level worker pool reused by every batch operation on
+        this session (instead of a thread per file per attempt).  Sized
+        on first use; shut down by ``Connector.destroy``."""
+        with self._lock:
+            self.check()
+            pool = self.state.get("_batch_pool")
+            if pool is None:
+                pool = ThreadPoolExecutor(
+                    max_workers=max(1, size),
+                    thread_name_prefix=f"{self.connector.name}-batch")
+                self.state["_batch_pool"] = pool
+            return pool
+
     # context-manager sugar
     def __enter__(self) -> "Session":
         return self
@@ -157,8 +186,12 @@ class Connector(ABC):
         pass
 
     def destroy(self, session: Session) -> None:
-        session.closed = True
-        session.state.clear()
+        with session._lock:  # serialize against worker_pool creation
+            pool = session.state.pop("_batch_pool", None)
+            session.closed = True
+            session.state.clear()
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def set_credential(self, session: Session, credential: Credential | None) -> None:
         """Validate/install a credential for this session.  Default
@@ -188,6 +221,57 @@ class Connector(ABC):
     @abstractmethod
     def recv(self, session: Session, path: str, channel: AppChannel) -> None:
         """Read from the application, write to storage at ``path``."""
+
+    # -- bulk data plane --------------------------------------------------
+    def send_batch(self, session: Session, paths: Sequence[str],
+                   channel_factory: Callable[[str], AppChannel | None]) -> None:
+        """Bulk ``send``: move every path through the data plane in one
+        call.  ``channel_factory(path)`` returns the AppChannel for each
+        path (``None`` skips it).  Per-file failures are contained —
+        reported through ``channel.finished(error)`` — so one bad file
+        never aborts the rest of the batch.  Default: per-file fallback;
+        Connectors override to amortize per-file costs natively."""
+        for path in paths:
+            channel = channel_factory(path)
+            if channel is None:
+                continue
+            try:
+                self.send(session, path, channel)
+            except Exception as e:
+                channel.finished(e)
+
+    def recv_batch(self, session: Session, paths: Sequence[str],
+                   channel_factory: Callable[[str], AppChannel | None]) -> None:
+        """Bulk ``recv`` — see :meth:`send_batch` for the contract."""
+        for path in paths:
+            channel = channel_factory(path)
+            if channel is None:
+                continue
+            try:
+                self.recv(session, path, channel)
+            except Exception as e:
+                channel.finished(e)
+
+    #: worker-pool width for native batch implementations
+    BATCH_POOL_SIZE = 8
+
+    def _dispatch_batch(self, session: Session, paths: Sequence[str],
+                        channel_factory, one,
+                        pool_size: int | None = None) -> None:
+        """Submit-and-collect loop shared by native batch paths: one
+        ``one(path, channel)`` task per file on the session's pool.
+        ``one`` must contain its own errors (report them through
+        ``channel.finished``), so ``fut.result()`` never raises for a
+        single bad file."""
+        pool = session.worker_pool(pool_size or self.BATCH_POOL_SIZE)
+        futures = []
+        for path in paths:
+            channel = channel_factory(path)
+            if channel is None:
+                continue
+            futures.append(pool.submit(one, path, channel))
+        for fut in futures:
+            fut.result()
 
     # -- optional capabilities -------------------------------------------
     def checksum(self, session: Session, path: str, algorithm: str) -> str:

@@ -164,6 +164,18 @@ class Advisor:
         budget = 0.05 * wire
         return max(1, min(n_files, int(budget / r.model.t0) or 1))
 
+    def coalesce_threshold(self, route: Route | None = None) -> int:
+        """Size ``TransferOptions.coalesce_threshold`` from a fitted
+        model: a file is overhead-dominated — and worth coalescing into
+        a pipelined batch — when its wire time is below the per-file
+        overhead, i.e. ``size < t0 * R`` (Eq. 4 with N=1).  Returns the
+        break-even size in bytes (0 when the route has no measurable
+        per-file overhead, which disables batching)."""
+        r = route or self.routes[0]
+        if r.model.t0 <= 0 or not math.isfinite(r.model.throughput):
+            return 0
+        return int(r.model.t0 * r.model.throughput)
+
 
 def _cc_ladder(max_cc: int) -> list[int]:
     out, cc = [], 1

@@ -18,16 +18,34 @@ The data channel between the two connectors' DTNs is an emulated link
 chosen from their locations: same location -> loopback, otherwise the
 WAN (where GridFTP's parallel streams and out-of-order blocks are what
 the paper credits for Conn-cloud's wins, §6.2).
+
+Small-file regime (paper §5.3.2 / §8)
+-------------------------------------
+Eq. 4 (``T = N*t0 + B/R + S0``) says per-file overhead ``t0`` dominates
+many-small-file transfers, so the service coalesces files smaller than
+``TransferOptions.coalesce_threshold`` into *batches* of up to
+``max_batch_files``.  Each batch shares ONE pipelined control-channel
+exchange (one ``file_pipeline_cost``, not one per file) and one
+``_FilePipe`` pool, and moves through the Connector bulk data-plane API
+(``send_batch``/``recv_batch``) where Connectors amortize their own
+per-file costs (request pipelining, grouped API admission, reused
+session worker pools).  Files at or above the threshold keep the
+per-file path with its intra-file ``parallelism``.  Size the threshold
+from a fitted model via ``Advisor.coalesce_threshold`` (perfmodel);
+``coalesce_threshold=0`` disables batching entirely.  A failure inside
+a batch is contained to its file: that file falls back to the per-file
+retry path while its batch-mates complete normally.
 """
 
 from __future__ import annotations
 
+import bisect
 import hashlib
 import json
 import os
 import threading
 import time
-import uuid
+from collections import deque
 from dataclasses import dataclass, field
 
 from .clock import Clock, DEFAULT_CLOCK, Link, loopback
@@ -88,6 +106,11 @@ class TransferOptions:
     auto_tune: bool = False         # §8: probe concurrency upward
     max_concurrency: int = 32
     verify_sampling: float = 1.0    # fraction of files integrity-checked
+    #: files strictly smaller than this are coalesced into pipelined
+    #: batches (§5.3.2/§8 small-file regime); 0 disables batching.
+    #: ``Advisor.coalesce_threshold`` sizes this from a fitted model.
+    coalesce_threshold: int = 1 * MB
+    max_batch_files: int = 32       # files per pipelined batch
 
 
 @dataclass
@@ -119,6 +142,8 @@ class TransferTask:
 
     PENDING, ACTIVE, SUCCEEDED, FAILED = "PENDING", "ACTIVE", "SUCCEEDED", "FAILED"
 
+    RATE_WINDOW = 4096  # ring-buffer capacity for throughput samples
+
     def __init__(self, task_id: str):
         self.task_id = task_id
         self.status = self.PENDING
@@ -127,18 +152,19 @@ class TransferTask:
         self.events: list[tuple[float, str]] = []
         self._done = threading.Event()
         self._lock = threading.Lock()
-        self._rate_samples: list[tuple[float, int]] = []
+        # bounded ring buffer: append is O(1), old samples fall off
+        self._rate_samples: deque[tuple[float, int]] = deque(
+            maxlen=self.RATE_WINDOW)
 
     def log(self, msg: str) -> None:
         with self._lock:
             self.events.append((time.monotonic(), msg))
 
     def _bytes_tick(self, n: int) -> None:
+        """Credit (or, for integrity re-sends, un-credit) progress."""
         with self._lock:
             self.stats.bytes_done += n
             self._rate_samples.append((time.monotonic(), self.stats.bytes_done))
-            if len(self._rate_samples) > 4096:
-                del self._rate_samples[:2048]
 
     def throughput(self, window: float = 2.0) -> float:
         """Instantaneous B/s over the trailing window (perf markers)."""
@@ -165,35 +191,90 @@ class TransferTask:
 # --------------------------------------------------------------------------
 class MarkerStore:
     """Persists per-file completed ranges so a killed service resumes
-    without re-sending bytes (paper §3 restart/'holey' transfers)."""
+    without re-sending bytes (paper §3 restart/'holey' transfers).
 
-    def __init__(self, root: str):
+    Layout per task: a base snapshot ``<task>.marker.json`` plus an
+    append-only JSONL journal ``<task>.marker.jsonl``.  Per-file
+    progress is ``append``-ed — O(record) I/O instead of rewriting the
+    whole task state on every file — and the journal is folded into the
+    snapshot every ``compact_every`` records.  ``load``/``save``/
+    ``append``/``clear`` all take the store lock, so a resume racing an
+    in-flight flush can never observe a torn state.
+    """
+
+    def __init__(self, root: str, compact_every: int = 256):
         self.root = root
+        self.compact_every = compact_every
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
+        self._journal_counts: dict[str, int] = {}
 
     def _path(self, task_id: str) -> str:
         return os.path.join(self.root, f"{task_id}.marker.json")
 
+    def _journal_path(self, task_id: str) -> str:
+        return os.path.join(self.root, f"{task_id}.marker.jsonl")
+
     def load(self, task_id: str) -> dict:
-        p = self._path(task_id)
-        if not os.path.exists(p):
-            return {"files": {}}
-        with open(p) as f:
-            return json.load(f)
-
-    def save(self, task_id: str, state: dict) -> None:
-        p = self._path(task_id)
-        tmp = p + ".tmp"
         with self._lock:
-            with open(tmp, "w") as f:
-                json.dump(state, f)
-            os.replace(tmp, p)
+            return self._load_locked(task_id)
 
-    def clear(self, task_id: str) -> None:
+    def _load_locked(self, task_id: str) -> dict:
+        state = {"files": {}}
         p = self._path(task_id)
         if os.path.exists(p):
-            os.remove(p)
+            with open(p) as f:
+                state = json.load(f)
+        j = self._journal_path(task_id)
+        if os.path.exists(j):
+            with open(j) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except ValueError:
+                        break  # torn tail from a crash mid-append
+                    st = state["files"].setdefault(
+                        rec["file"], {"done": [], "complete": False})
+                    for k in ("done", "complete", "checksum"):
+                        if k in rec:
+                            st[k] = rec[k]
+        return state
+
+    def save(self, task_id: str, state: dict) -> None:
+        """Full snapshot: rewrites the base and truncates the journal."""
+        with self._lock:
+            self._save_locked(task_id, state)
+
+    def _save_locked(self, task_id: str, state: dict) -> None:
+        p = self._path(task_id)
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, p)
+        j = self._journal_path(task_id)
+        if os.path.exists(j):
+            os.remove(j)
+        self._journal_counts.pop(task_id, None)
+
+    def append(self, task_id: str, path: str, entry: dict) -> None:
+        """Record one file's progress — O(record), not O(task state)."""
+        with self._lock:
+            with open(self._journal_path(task_id), "a") as f:
+                f.write(json.dumps({"file": path, **entry}) + "\n")
+            n = self._journal_counts.get(task_id, 0) + 1
+            self._journal_counts[task_id] = n
+            if n >= self.compact_every:
+                self._save_locked(task_id, self._load_locked(task_id))
+
+    def clear(self, task_id: str) -> None:
+        with self._lock:
+            for p in (self._path(task_id), self._journal_path(task_id)):
+                if os.path.exists(p):
+                    os.remove(p)
+            self._journal_counts.pop(task_id, None)
 
 
 def _merge_ranges(ranges: list[list[int]]) -> list[list[int]]:
@@ -205,6 +286,44 @@ def _merge_ranges(ranges: list[list[int]]) -> list[list[int]]:
         else:
             out.append([off, ln])
     return out
+
+
+class IntervalTracker:
+    """Incrementally-merged disjoint interval set.
+
+    ``add`` keeps the ``[offset, length]`` list sorted and coalesced via
+    bisect instead of re-sorting every recorded range on every block ack
+    (the old ``_merge_ranges``-per-callback hot path).  Streams write
+    mostly-sequentially, so intervals collapse and the list stays tiny.
+    """
+
+    __slots__ = ("_r", "covered")
+
+    def __init__(self, ranges=None):
+        self._r: list[list[int]] = _merge_ranges(
+            [list(r) for r in (ranges or [])])
+        self.covered: int = sum(ln for _, ln in self._r)
+
+    def add(self, offset: int, length: int) -> None:
+        if length <= 0:
+            return
+        r = self._r
+        end = offset + length
+        i = bisect.bisect_right(r, offset, key=lambda e: e[0])
+        if i > 0 and r[i - 1][0] + r[i - 1][1] >= offset:
+            i -= 1
+            offset = r[i][0]
+            end = max(end, r[i][0] + r[i][1])
+        j = i
+        while j < len(r) and r[j][0] <= end:
+            end = max(end, r[j][0] + r[j][1])
+            j += 1
+        removed = sum(ln for _, ln in r[i:j])
+        r[i:j] = [[offset, end - offset]]
+        self.covered += (end - offset) - removed
+
+    def ranges(self) -> list[list[int]]:
+        return [list(x) for x in self._r]
 
 
 def _holes(size: int, done: list[list[int]]) -> list[ByteRange]:
@@ -229,19 +348,29 @@ class _FilePipe:
     flight), pays transmission on the DTN<->DTN link, and queues blocks;
     the recv side consumes blocks (possibly out of order — storage
     writes are positional) and acknowledges via ``bytes_written``.
+
+    ``single_consumer=True`` (the batch path) relaxes the recv-side
+    drain condition: with exactly one consumer stream per file there is
+    no sibling stream that could requeue a partial block, so the
+    consumer may exit as soon as the sender is done and the ready queue
+    is empty — it acknowledges storage durability *after* the bulk PUT,
+    which would otherwise deadlock on the outstanding-block count.
     """
 
     def __init__(self, size: int, holes: list[ByteRange], link: Link,
-                 options: TransferOptions, on_written, checksum_alg: str | None):
+                 options: TransferOptions, on_written, checksum_alg: str | None,
+                 single_consumer: bool = False):
         self.size = size
         self.link = link
         self.opt = options
         self.on_written = on_written
-        self._claims: list[ByteRange] = list(holes)
+        self._claims: deque[ByteRange] = deque(holes)
         self._ready: dict[int, bytes] = {}
-        self._ready_order: list[int] = []
-        self._outstanding = 0
+        self._ready_order: deque[int] = deque()
+        self._outstanding = 0   # blocks consumed but not yet durable
+        self._claimed = 0       # blocks claimed but not yet pushed
         self._send_done = False
+        self._single_consumer = single_consumer
         self._error: Exception | None = None
         self._cv = threading.Condition()
         # incremental source checksum (folds in claim order, §7)
@@ -260,11 +389,11 @@ class _FilePipe:
                 rng = self._claims[0]
                 take = min(self.opt.blocksize, rng.length)
                 if take == rng.length:
-                    self._claims.pop(0)
+                    self._claims.popleft()
                 else:
                     self._claims[0] = ByteRange(rng.offset + take,
                                                 rng.length - take)
-                self._outstanding += 1
+                self._claimed += 1
                 return ByteRange(rng.offset, take)
             self._send_done = True
             self._cv.notify_all()
@@ -276,6 +405,7 @@ class _FilePipe:
         # (paper §2.2 / §6: parallel streams + out-of-order blocks)
         self.link.transmit(len(data), streams=self.opt.parallelism)
         with self._cv:
+            self._claimed = max(0, self._claimed - 1)
             self._ready[offset] = data
             self._ready_order.append(offset)
             if self._hash is not None:
@@ -293,6 +423,17 @@ class _FilePipe:
             self._send_done = True
             self._cv.notify_all()
 
+    def send_complete(self) -> None:
+        """Sender signalled completion (``finished(None)``).  Covers
+        connectors that stop early — e.g. a file that shrank below its
+        planned size — without ever draining the claim queue; any claim
+        still unpushed at this point is abandoned, and the recv side
+        must not wait for it."""
+        with self._cv:
+            self._send_done = True
+            self._claimed = 0
+            self._cv.notify_all()
+
     # ---- recv side ----
     def next_block_range(self) -> ByteRange | None:
         with self._cv:
@@ -300,9 +441,12 @@ class _FilePipe:
                 if self._error is not None:
                     raise self._error
                 if self._ready_order:
-                    off = self._ready_order.pop(0)
+                    off = self._ready_order.popleft()
                     return ByteRange(off, len(self._ready[off]))
-                if self._send_done and self._outstanding == 0 and not self._ready:
+                if (self._send_done and not self._ready
+                        and self._claimed == 0
+                        and (self._single_consumer
+                             or self._outstanding == 0)):
                     return None
                 self._cv.wait(timeout=10.0)
 
@@ -311,8 +455,12 @@ class _FilePipe:
             data = self._ready.pop(offset)
             if length < len(data):  # partial consume: requeue remainder
                 self._ready[offset + length] = data[length:]
-                self._ready_order.insert(0, offset + length)
+                self._ready_order.appendleft(offset + length)
                 data = data[:length]
+            # outstanding counts blocks between consumption and the
+            # storage-durability ack (written), so a claim the sender
+            # abandoned can never wedge the drain condition
+            self._outstanding += 1
             return data
 
     def written(self, offset: int, length: int) -> None:
@@ -355,6 +503,8 @@ class _SendSide(AppChannel):
     def finished(self, error: Exception | None = None) -> None:
         if error is not None:
             self.pipe.fail(error)
+        else:
+            self.pipe.send_complete()
 
 
 class _RecvSide(AppChannel):
@@ -385,6 +535,25 @@ class _RecvSide(AppChannel):
             # stop the send side claiming more ranges, and surface the
             # error to the retry loop
             self.pipe.fail(error)
+
+
+class _BatchEntry:
+    """One file's slot in a coalesced batch."""
+
+    __slots__ = ("spath", "dpath", "size", "st", "holes", "full",
+                 "tracker", "pipe", "lock")
+
+    def __init__(self, spath: str, dpath: str, size: int, st: dict,
+                 holes: list[ByteRange]):
+        self.spath = spath
+        self.dpath = dpath
+        self.size = size
+        self.st = st
+        self.holes = holes
+        self.full = holes == [ByteRange(0, size)] or size == 0
+        self.tracker = IntervalTracker(st.get("done", []))
+        self.pipe: _FilePipe | None = None
+        self.lock = threading.Lock()
 
 
 # --------------------------------------------------------------------------
@@ -426,10 +595,19 @@ class TransferService:
     def submit(self, src: Endpoint, dst: Endpoint,
                options: TransferOptions | None = None,
                task_id: str | None = None, sync: bool = False) -> TransferTask:
+        """Submit a transfer.  Pass ``task_id`` explicitly to make the
+        task resumable after a kill (restart markers are keyed by it);
+        the default id is unique per submission, so resubmitting the
+        same route starts fresh instead of colliding with — or silently
+        inheriting the markers of — an earlier task."""
         options = options or TransferOptions()
         if task_id is None:
+            # route digest for debuggability + random uniquifier so
+            # resubmitting the same src->dst never collides with (or
+            # silently inherits the restart markers of) a live task
             basis = f"{src.resolved_id()}:{src.path}->{dst.resolved_id()}:{dst.path}"
-            task_id = hashlib.sha1(basis.encode()).hexdigest()[:16]
+            task_id = (hashlib.sha1(basis.encode()).hexdigest()[:12]
+                       + "-" + os.urandom(4).hex())
         task = TransferTask(task_id)
         self._tasks[task_id] = task
         if sync:
@@ -496,7 +674,7 @@ class TransferService:
         task.stats.bytes_total = sum(sz for _, _, sz in plan)
         link = self._link_factory(src.connector, dst.connector)
 
-        queue: list[tuple[str, str, int]] = []
+        pending: list[tuple[str, str, int]] = []
         for sp, dp, sz in plan:
             st = fstate.get(sp)
             if st and st.get("complete"):
@@ -508,7 +686,25 @@ class TransferService:
                 continue
             if st:
                 task.stats.bytes_done += sum(ln for _, ln in st.get("done", []))
-            queue.append((sp, dp, sz))
+            pending.append((sp, dp, sz))
+
+        # coalesce the small-file tail into pipelined batches (§5.3.2);
+        # a lone small file gains nothing from the bulk path
+        small: list[tuple[str, str, int]] = []
+        large: list[tuple[str, str, int]] = []
+        for item in pending:
+            if opt.coalesce_threshold and item[2] < opt.coalesce_threshold:
+                small.append(item)
+            else:
+                large.append(item)
+        if len(small) < 2:
+            large = pending
+            small = []
+        work: deque = deque()
+        for i in range(0, len(small), max(1, opt.max_batch_files)):
+            work.append(("batch", small[i:i + max(1, opt.max_batch_files)]))
+        for item in large:
+            work.append(("file", item))
 
         qlock = threading.Lock()
         active = [0]
@@ -516,15 +712,15 @@ class TransferService:
 
         def next_item():
             with qlock:
-                if not queue:
+                if not work:
                     return None
-                return queue.pop(0)
+                return work.popleft()
 
         def worker(worker_idx: int) -> None:
             while not stop.is_set():
                 if opt.auto_tune and worker_idx >= task_target[0]:
                     with qlock:
-                        drained = not queue
+                        drained = not work
                     if drained:  # nothing left to ramp into
                         return
                     time.sleep(0.002)
@@ -535,14 +731,18 @@ class TransferService:
                 with qlock:
                     active[0] += 1
                 try:
-                    self._transfer_file(task, src, dst, s_src, s_dst, opt,
-                                        link, fstate, state, *item)
+                    if item[0] == "file":
+                        self._transfer_file(task, src, dst, s_src, s_dst, opt,
+                                            link, fstate, state, *item[1])
+                    else:
+                        self._transfer_batch(task, src, dst, s_src, s_dst, opt,
+                                             link, fstate, state, item[1])
                 finally:
                     with qlock:
                         active[0] -= 1
 
         n_workers = opt.max_concurrency if opt.auto_tune else opt.concurrency
-        n_workers = max(1, min(n_workers, max(1, len(queue))))
+        n_workers = max(1, min(n_workers, max(1, len(work))))
         task_target = [opt.concurrency]
         tuner = None
         if opt.auto_tune:
@@ -577,6 +777,128 @@ class TransferService:
                 target[0] = max(1, target[0] // 2)
                 task.log(f"auto-tune: backing off -> {target[0]}")
 
+    # ---- a coalesced batch of small files ----------------------------------
+    def _transfer_batch(self, task: TransferTask, src: Endpoint, dst: Endpoint,
+                        s_src: Session, s_dst: Session, opt: TransferOptions,
+                        link: Link, fstate: dict, state: dict,
+                        files: list[tuple[str, str, int]]) -> None:
+        """Move a batch of small files through ONE pipelined control
+        exchange and one ``_FilePipe`` pool via the Connector bulk API.
+        Per-file failures are contained: the failed file falls back to
+        the per-file retry path; its batch-mates are unaffected."""
+        # one pipelined control-channel exchange for the whole batch
+        self.clock.sleep(opt.file_pipeline_cost)
+        alg = opt.checksum_algorithm if opt.integrity else None
+
+        entries: list[_BatchEntry] = []
+        fallback: list[tuple[str, str, int]] = []
+        for sp, dp, size in files:
+            st = fstate.setdefault(sp, {"done": [], "complete": False})
+            holes = _holes(size, st.get("done", []))
+            if not holes and size > 0:
+                # bytes already present from a prior run; only the
+                # finalize/verify step remains -> per-file path
+                fallback.append((sp, dp, size))
+                continue
+            entries.append(_BatchEntry(sp, dp, size, st, holes))
+
+        for e in entries:
+            def on_written(offset: int, length: int, e: _BatchEntry = e) -> None:
+                task._bytes_tick(length)
+                flush = False
+                with e.lock:
+                    e.tracker.add(offset, length)
+                    if (offset // (16 * MB)) != ((offset + length) // (16 * MB)):
+                        e.st["done"] = e.tracker.ranges()
+                        flush = True
+                if flush:  # opportunistic journal record, not per block
+                    self.markers.append(task.task_id, e.spath,
+                                        {"done": e.st["done"]})
+
+            e.pipe = _FilePipe(e.size, e.holes, link, opt, on_written, alg,
+                               single_consumer=True)
+
+        if entries:
+            by_src = {e.spath: e for e in entries}
+            by_dst = {e.dpath: e for e in entries}
+
+            def send_factory(path: str):
+                e = by_src.get(path)
+                return e.pipe.send_channel if e is not None else None
+
+            def recv_factory(path: str):
+                e = by_dst.get(path)
+                return e.pipe.recv_channel if e is not None else None
+
+            def do_send() -> None:
+                try:
+                    src.connector.send_batch(s_src, [e.spath for e in entries],
+                                             send_factory)
+                except Exception as exc:  # batch-level failure
+                    for e in entries:
+                        e.pipe.fail(exc)
+
+            sender = threading.Thread(target=do_send, daemon=True)
+            sender.start()
+            try:
+                dst.connector.recv_batch(s_dst, [e.dpath for e in entries],
+                                         recv_factory)
+            except Exception as exc:  # batch-level failure
+                for e in entries:
+                    e.pipe.fail(exc)
+            sender.join()
+
+        for e in entries:
+            e.st["done"] = e.tracker.ranges()
+            err = e.pipe._error
+            complete = e.size == 0 or e.tracker.covered >= e.size
+            if err is not None or not complete:
+                if isinstance(err, TransientError):
+                    task.stats.faults_retried += 1
+                task.log(f"batch: {e.spath} fell back to per-file path "
+                         f"({type(err).__name__ if err else 'incomplete'})")
+                fallback.append((e.spath, e.dpath, e.size))
+                continue
+            try:
+                checksum = e.pipe.source_checksum()
+                if opt.integrity and not e.full:
+                    # resumed/holey file: the streaming hash missed the
+                    # prior bytes — recompute at the source (§7 semantics)
+                    checksum = src.connector.checksum(s_src, e.spath,
+                                                      opt.checksum_algorithm)
+                if opt.integrity and self._should_verify(e.spath, opt):
+                    if not self._verify(dst, s_dst, e.dpath, checksum, opt):
+                        task.stats.integrity_failures += 1
+                        task.log(f"integrity mismatch on {e.dpath}; re-sending")
+                        # un-credit the bytes being thrown away, then full
+                        # per-file re-send with its own integrity budget
+                        task._bytes_tick(-e.tracker.covered)
+                        e.st["done"] = []
+                        e.st["complete"] = False
+                        fallback.append((e.spath, e.dpath, e.size))
+                        continue
+                e.st["complete"] = True
+                e.st["checksum"] = checksum
+                self.markers.append(task.task_id, e.spath,
+                                    {"done": e.st["done"], "complete": True,
+                                     "checksum": checksum})
+            except Exception as exc:
+                # no finalize error may escape the worker thread (that
+                # would silently drop the remaining work items) — the
+                # per-file path classifies and records it instead
+                task.log(f"batch: finalize error on {e.dpath} "
+                         f"({type(exc).__name__}); per-file fallback")
+                e.st["complete"] = False
+                fallback.append((e.spath, e.dpath, e.size))
+                continue
+            task.stats.files_done += 1
+            task.files.append(FileResult(e.spath, e.dpath, e.size, attempts=1,
+                                         checksum=checksum, ok=True))
+
+        for sp, dp, size in fallback:
+            self._transfer_file(task, src, dst, s_src, s_dst, opt,
+                                link, fstate, state, sp, dp, size)
+
     # ---- one file ----------------------------------------------------------
     def _transfer_file(self, task: TransferTask, src: Endpoint, dst: Endpoint,
                       s_src: Session, s_dst: Session, opt: TransferOptions,
@@ -593,12 +915,16 @@ class TransferService:
                 # pipelined per-file command exchange on the control channel
                 self.clock.sleep(opt.file_pipeline_cost)
                 checksum = self._move_one(task, src, dst, s_src, s_dst, opt,
-                                          link, st, state, spath, dpath, size)
+                                          link, st, spath, dpath, size)
                 if opt.integrity and self._should_verify(spath, opt):
                     ok = self._verify(dst, s_dst, dpath, checksum, opt)
                     if not ok:
                         task.stats.integrity_failures += 1
                         task.log(f"integrity mismatch on {dpath}; re-sending")
+                        # un-credit previously-ticked bytes so bytes_done
+                        # can't exceed bytes_total after the re-send
+                        task._bytes_tick(
+                            -sum(ln for _, ln in st.get("done", [])))
                         st["done"] = []  # full re-send
                         st["complete"] = False
                         if integrity_budget <= 0:
@@ -609,7 +935,9 @@ class TransferService:
                 result.ok = True
                 st["complete"] = True
                 st["checksum"] = checksum
-                self.markers.save(task.task_id, state)
+                self.markers.append(task.task_id, spath,
+                                    {"done": st["done"], "complete": True,
+                                     "checksum": checksum})
                 task.stats.files_done += 1
                 task.files.append(result)
                 return
@@ -640,24 +968,36 @@ class TransferService:
         return h < opt.verify_sampling
 
     def _move_one(self, task, src, dst, s_src, s_dst, opt, link,
-                  st: dict, state: dict, spath: str, dpath: str,
+                  st: dict, spath: str, dpath: str,
                   size: int) -> str | None:
         holes = _holes(size, st.get("done", []))
         if not holes and size > 0:
-            return st.get("checksum")
+            checksum = st.get("checksum")
+            if checksum is None and opt.integrity:
+                # bytes are all present but never checksummed (e.g. a
+                # verify step that errored out mid-task): recompute, or
+                # _verify(None) would silently skip verification
+                checksum = src.connector.checksum(s_src, spath,
+                                                  opt.checksum_algorithm)
+            return checksum
         if size == 0:
             holes = []
 
+        tracker = IntervalTracker(st.get("done", []))
         marker_lock = threading.Lock()
 
         def on_written(offset: int, length: int) -> None:
             task._bytes_tick(length)
+            flush = False
             with marker_lock:
-                st["done"] = [list(r) for r in
-                              _merge_ranges(st.get("done", []) + [[offset, length]])]
-            # restart markers are flushed opportunistically (not per block)
-            if (offset // (16 * MB)) != ((offset + length) // (16 * MB)):
-                self.markers.save(task.task_id, state)
+                tracker.add(offset, length)
+                if (offset // (16 * MB)) != ((offset + length) // (16 * MB)):
+                    st["done"] = tracker.ranges()
+                    flush = True
+            # restart markers are journaled opportunistically (not per
+            # block, and never as a whole-state rewrite)
+            if flush:
+                self.markers.append(task.task_id, spath, {"done": st["done"]})
 
         pipe = _FilePipe(size, holes, link, opt, on_written,
                          opt.checksum_algorithm if opt.integrity else None)
@@ -679,6 +1019,7 @@ class TransferService:
         except Exception as e:
             recv_err = e
         sender.join()
+        st["done"] = tracker.ranges()
         if send_err:
             raise send_err[0]
         if recv_err is not None:

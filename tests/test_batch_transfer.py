@@ -1,0 +1,455 @@
+"""Batched small-file pipeline (paper §5.3.2/§8): the Connector bulk
+data plane, the coalescing batch scheduler, restart-marker interaction,
+the JSONL marker journal, and the O(1) hot-path structures."""
+
+import json
+import os
+import random
+import threading
+
+import pytest
+
+from repro.core import (Credential, CredentialStore, Endpoint,
+                        TransferOptions, TransferService, checksum_bytes)
+from repro.core.clock import Clock, Link
+from repro.core.perfmodel import Advisor, PerfModel, Route
+from repro.core.transfer import IntervalTracker, MarkerStore, _merge_ranges
+from repro.connectors import (MemoryConnector, ObjectStoreConnector,
+                              PosixConnector, make_cloud)
+
+MB = 1024 * 1024
+KB = 1024
+
+
+class CountingLink(Link):
+    """Zero-cost data link that counts payload bytes, so tests can
+    assert exactly how much was (re-)sent."""
+
+    def __init__(self, clock):
+        super().__init__("count", rtt=0.0, per_stream_bw=float("inf"),
+                         aggregate_bw=float("inf"), clock=clock)
+        self.bytes = 0
+        self._count_lock = threading.Lock()
+
+    def transmit(self, nbytes, streams=1):
+        with self._count_lock:
+            self.bytes += nbytes
+        super().transmit(nbytes, streams)
+
+
+def make_service(tmp_path, link=None):
+    clock = Clock(scale=0.0)
+    creds = CredentialStore()
+    kw = {}
+    if link is not None:
+        kw["data_link_factory"] = lambda s, d: link
+    svc = TransferService(credential_store=creds,
+                          marker_root=os.path.join(str(tmp_path), "markers"),
+                          clock=clock, **kw)
+    return svc, creds, clock
+
+
+def seeded_posix(tmp_path, files, sub="src"):
+    root = os.path.join(str(tmp_path), sub)
+    conn = PosixConnector(root)
+    for name, payload in files.items():
+        p = os.path.join(root, name)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+    return conn
+
+
+def small_tree(n=12, seed=0):
+    rng = random.Random(seed)
+    return {f"d/sub{i % 3}/f{i:03d}.bin": rng.randbytes(rng.randint(1, 64 * KB))
+            for i in range(n)}
+
+
+# ---------------------------------------------------------------------------
+# many-small-files through each connector family
+# ---------------------------------------------------------------------------
+def _dst_memory(tmp_path, creds, clock):
+    conn = MemoryConnector()
+    read = lambda key: conn.store.get(key)
+    return conn, "", read
+
+
+def _dst_posix(tmp_path, creds, clock):
+    conn = PosixConnector(os.path.join(str(tmp_path), "dstfs"))
+    def read(key):
+        with open(os.path.join(str(tmp_path), "dstfs", key), "rb") as f:
+            return f.read()
+    return conn, "", read
+
+
+def _dst_cloud_local(tmp_path, creds, clock):
+    storage = make_cloud("s3", clock=clock)
+    conn = ObjectStoreConnector(storage, placement="local", clock=clock)
+    creds.register(conn.name, Credential("s3-keypair", {}))
+    return conn, conn.name, lambda key: storage.blobs.get(key)
+
+
+def _dst_cloud_placed(tmp_path, creds, clock):
+    storage = make_cloud("gcs", clock=clock)
+    conn = ObjectStoreConnector(storage, placement="cloud", clock=clock)
+    creds.register(conn.name, Credential("oauth2-token", {"token": "t"}))
+    return conn, conn.name, lambda key: storage.blobs.get(key)
+
+
+DSTS = {"memory": _dst_memory, "posix": _dst_posix,
+        "cloud-local": _dst_cloud_local, "cloud-placed": _dst_cloud_placed}
+
+
+@pytest.mark.parametrize("dst_kind", sorted(DSTS))
+def test_many_small_files_batched(tmp_path, dst_kind):
+    svc, creds, clock = make_service(tmp_path)
+    files = small_tree(n=20, seed=3)
+    src = seeded_posix(tmp_path, files)
+    dst, ep_id, read = DSTS[dst_kind](tmp_path, creds, clock)
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", ep_id),
+                      TransferOptions(concurrency=4, startup_cost=0.0),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert task.stats.files_done == len(files)
+    assert task.stats.bytes_done == task.stats.bytes_total
+    for name, payload in files.items():
+        assert read("out/" + name[len("d/"):]) == payload
+
+
+def test_memory_source_batched(tmp_path):
+    svc, creds, clock = make_service(tmp_path)
+    src = MemoryConnector()
+    files = small_tree(n=10, seed=5)
+    for name, payload in files.items():
+        src.store.put(name, payload)
+    dst = PosixConnector(os.path.join(str(tmp_path), "dl"))
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "mirror"),
+                      TransferOptions(startup_cost=0.0), sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    for name, payload in files.items():
+        with open(os.path.join(str(tmp_path), "dl", "mirror",
+                               name[len("d/"):]), "rb") as f:
+            assert f.read() == payload
+
+
+# ---------------------------------------------------------------------------
+# batch + restart markers
+# ---------------------------------------------------------------------------
+def test_batch_resume_skips_done_ranges(tmp_path):
+    clock = Clock(scale=0.0)
+    link = CountingLink(clock)
+    svc, creds, _ = make_service(tmp_path, link=link)
+    payloads = {f"d/f{i}.bin": os.urandom(64 * KB) for i in range(6)}
+    src = seeded_posix(tmp_path, payloads)
+    dst = MemoryConnector()
+
+    task_id = "batch-resume"
+    # f0 fully complete, f1 half done from a prior (killed) run
+    state = {"files": {
+        "d/f0.bin": {"done": [[0, 64 * KB]], "complete": True},
+        "d/f1.bin": {"done": [[0, 32 * KB]], "complete": False},
+    }}
+    svc.markers.save(task_id, state)
+    dst.store.put("out/f0.bin", payloads["d/f0.bin"])
+    dst.store.put_range("out/f1.bin", 0, payloads["d/f1.bin"][:32 * KB])
+
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(startup_cost=0.0),
+                      task_id=task_id, sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    # only the holes crossed the data channel: 4 whole files + half of f1
+    assert link.bytes == 4 * 64 * KB + 32 * KB
+    for name, payload in payloads.items():
+        assert dst.store.get("out/" + name[len("d/"):]) == payload
+    assert task.stats.bytes_done == task.stats.bytes_total
+    assert svc.markers.load(task_id) == {"files": {}}  # cleared on success
+
+
+def test_batch_resume_prefix_hole_cloud(tmp_path):
+    """A resumed upload whose remaining hole is a *prefix* must not be
+    single-shot PUT — that would truncate the tail already in storage."""
+    svc, creds, clock = make_service(tmp_path)
+    payload = os.urandom(48 * KB)
+    files = {"d/a.bin": payload, "d/b.bin": os.urandom(8 * KB)}
+    src = seeded_posix(tmp_path, files)
+    storage = make_cloud("s3", clock=clock)
+    dst = ObjectStoreConnector(storage, placement="local", clock=clock)
+    creds.register(dst.name, Credential("s3-keypair", {}))
+    task_id = "prefix-hole"
+    state = {"files": {"d/a.bin": {"done": [[16 * KB, 32 * KB]],
+                                   "complete": False}}}
+    svc.markers.save(task_id, state)
+    storage.blobs.put_range("out/a.bin", 16 * KB, payload[16 * KB:])
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", dst.name),
+                      TransferOptions(startup_cost=0.0),
+                      task_id=task_id, sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert storage.blobs.get("out/a.bin") == payload
+    assert storage.blobs.get("out/b.bin") == files["d/b.bin"]
+
+
+# ---------------------------------------------------------------------------
+# property: batched and unbatched transfers are byte-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_batched_equals_unbatched(tmp_path, seed):
+    rng = random.Random(seed)
+    files = {}
+    for i in range(rng.randint(5, 24)):
+        depth = rng.randint(0, 2)
+        d = "/".join(f"lvl{rng.randint(0, 2)}" for _ in range(depth))
+        name = (f"t/{d}/f{i:03d}.bin" if d else f"t/f{i:03d}.bin")
+        files[name] = rng.randbytes(rng.choice(
+            [0, 1, 37, 4 * KB, 100 * KB, 300 * KB]))
+    outcomes = {}
+    for mode, threshold in (("batched", 256 * KB), ("unbatched", 0)):
+        svc, creds, clock = make_service(os.path.join(str(tmp_path), mode))
+        src = seeded_posix(os.path.join(str(tmp_path), mode), files)
+        dst = MemoryConnector()
+        task = svc.submit(Endpoint(src, "t"), Endpoint(dst, "o"),
+                          TransferOptions(coalesce_threshold=threshold,
+                                          startup_cost=0.0), sync=True)
+        assert task.status == task.SUCCEEDED, task.events[-5:]
+        outcomes[mode] = {
+            k: (bytes(v), checksum_bytes(bytes(v), "sha256"))
+            for k, v in dst.store._objs.items()}
+    assert outcomes["batched"] == outcomes["unbatched"]
+
+
+def test_batched_equals_unbatched_integrity_cloud(tmp_path):
+    rng = random.Random(7)
+    files = {f"t/f{i:03d}.bin": rng.randbytes(rng.randint(1, 128 * KB))
+             for i in range(9)}
+    sums = {}
+    for mode, threshold in (("batched", 256 * KB), ("unbatched", 0)):
+        svc, creds, clock = make_service(os.path.join(str(tmp_path), mode))
+        src = seeded_posix(os.path.join(str(tmp_path), mode), files)
+        storage = make_cloud("s3", clock=clock)
+        dst = ObjectStoreConnector(storage, placement="local", clock=clock)
+        creds.register(dst.name, Credential("s3-keypair", {}))
+        task = svc.submit(Endpoint(src, "t"), Endpoint(dst, "o", dst.name),
+                          TransferOptions(coalesce_threshold=threshold,
+                                          integrity=True, startup_cost=0.0),
+                          sync=True)
+        assert task.status == task.SUCCEEDED, task.events[-5:]
+        assert task.stats.integrity_failures == 0
+        sums[mode] = {f.src: f.checksum for f in task.files}
+        for name, payload in files.items():
+            assert storage.blobs.get("o/" + name[len("t/"):]) == payload
+    assert sums["batched"] == sums["unbatched"]
+    for name, payload in files.items():
+        assert sums["batched"][name] == checksum_bytes(payload, "sha256")
+
+
+# ---------------------------------------------------------------------------
+# containment: a fault inside a batch only affects its file
+# ---------------------------------------------------------------------------
+def test_batch_fault_contained_and_retried(tmp_path):
+    svc, creds, clock = make_service(tmp_path)
+    files = {f"d/f{i}.bin": os.urandom(16 * KB) for i in range(8)}
+    src = seeded_posix(tmp_path, files)
+    storage = make_cloud("s3", clock=clock)
+    fails = {"n": 0}
+
+    def fault_plan(op, idx):
+        if op == "put" and fails["n"] < 2:
+            fails["n"] += 1
+            return True
+        return False
+
+    storage.fault_plan = fault_plan
+    dst = ObjectStoreConnector(storage, placement="local", clock=clock)
+    creds.register(dst.name, Credential("s3-keypair", {}))
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", dst.name),
+                      TransferOptions(retry_backoff=0.001, startup_cost=0.0),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert task.stats.files_done == len(files)
+    for name, payload in files.items():
+        assert storage.blobs.get("out/" + name[len("d/"):]) == payload
+
+
+class InflatingPosix(PosixConnector):
+    """Reports every file 8 KB larger than it is — models a source file
+    that shrank between directory expansion and the data phase."""
+
+    PAD = 8 * KB
+
+    def _inflate(self, info):
+        import dataclasses
+        if info.is_dir:
+            return info
+        return dataclasses.replace(info, size=info.size + self.PAD)
+
+    def stat(self, session, path):
+        return self._inflate(super().stat(session, path))
+
+    def listdir(self, session, path):
+        return [self._inflate(i) for i in super().listdir(session, path)]
+
+
+def test_shrunk_source_file_does_not_hang(tmp_path):
+    """A sender that stops early (planned size > real size) must signal
+    completion through finished(None) instead of wedging the recv side
+    on claims nobody will fill."""
+    svc, creds, clock = make_service(tmp_path)
+    files = {f"d/f{i}.bin": os.urandom(16 * KB) for i in range(4)}
+    root = os.path.join(str(tmp_path), "src")
+    seeded_posix(tmp_path, files)
+    src = InflatingPosix(root)
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(startup_cost=0.0, max_retries=1,
+                                      retry_backoff=0.001))
+    assert task.wait(timeout=30), "transfer hung on shrunk source files"
+    for name, payload in files.items():
+        assert bytes(dst.store.get("out/" + name[len("d/"):])
+                     [:len(payload)]) == payload
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+def test_task_id_resubmit_no_collision(tmp_path):
+    svc, creds, clock = make_service(tmp_path)
+    payload = os.urandom(8 * KB)
+    src = seeded_posix(tmp_path, {"a.bin": payload})
+    dst = MemoryConnector()
+    opts = TransferOptions(startup_cost=0.0)
+    t1 = svc.submit(Endpoint(src, "a.bin"), Endpoint(dst, "a.bin"), opts,
+                    sync=True)
+    t2 = svc.submit(Endpoint(src, "a.bin"), Endpoint(dst, "a.bin"), opts,
+                    sync=True)
+    assert t1.task_id != t2.task_id  # same route must not collide
+    assert svc.get(t1.task_id) is t1  # first task not overwritten
+    assert svc.get(t2.task_id) is t2
+    assert t1.status == t1.SUCCEEDED and t2.status == t2.SUCCEEDED
+
+
+class CorruptingConnector(MemoryConnector):
+    """Flips a byte on the first N received files (silent corruption,
+    paper §7)."""
+
+    def __init__(self, n_corrupt=1):
+        super().__init__()
+        self.n_corrupt = n_corrupt
+        self._count = 0
+        self._corrupt_lock = threading.Lock()
+
+    def recv(self, session, path, channel):
+        super().recv(session, path, channel)
+        with self._corrupt_lock:
+            if self._count < self.n_corrupt:
+                self._count += 1
+                key = self._key(path)
+                data = bytearray(self.store.get(key))
+                data[len(data) // 2] ^= 0xFF
+                self.store.put(key, bytes(data))
+
+
+@pytest.mark.parametrize("size", [64 * KB, 3 * MB])
+def test_bytes_done_not_overcounted_on_integrity_resend(tmp_path, size):
+    """Integrity re-send must un-credit the discarded bytes (the small
+    size exercises the batch path, the large one the per-file path —
+    both with a second small file so batching actually engages)."""
+    svc, creds, clock = make_service(tmp_path)
+    files = {"d/x.bin": os.urandom(size), "d/y.bin": os.urandom(32 * KB)}
+    src = seeded_posix(tmp_path, files)
+    dst = CorruptingConnector(n_corrupt=1)
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(integrity=True, startup_cost=0.0),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert task.stats.integrity_failures == 1
+    assert task.stats.bytes_done == task.stats.bytes_total  # no over-count
+    for name, payload in files.items():
+        assert dst.store.get("out/" + name[len("d/"):]) == payload
+
+
+# ---------------------------------------------------------------------------
+# marker journal
+# ---------------------------------------------------------------------------
+def test_marker_journal_append_load_compact(tmp_path):
+    ms = MarkerStore(os.path.join(str(tmp_path), "m"), compact_every=3)
+    ms.append("t1", "a", {"done": [[0, 10]]})
+    ms.append("t1", "b", {"done": [[0, 5]], "complete": True,
+                          "checksum": "c0ffee"})
+    st = ms.load("t1")
+    assert st["files"]["a"]["done"] == [[0, 10]]
+    assert st["files"]["b"]["complete"] and st["files"]["b"]["checksum"] == "c0ffee"
+    # a later record for the same file supersedes the earlier one
+    ms.append("t1", "a", {"done": [[0, 20]], "complete": True})
+    # compact_every=3 reached: journal folded into the base snapshot
+    assert not os.path.exists(ms._journal_path("t1"))
+    assert os.path.exists(ms._path("t1"))
+    st = ms.load("t1")
+    assert st["files"]["a"] == {"done": [[0, 20]], "complete": True}
+    ms.clear("t1")
+    assert ms.load("t1") == {"files": {}}
+    assert not os.path.exists(ms._path("t1"))
+
+
+def test_marker_journal_torn_tail_ignored(tmp_path):
+    ms = MarkerStore(os.path.join(str(tmp_path), "m"))
+    ms.append("t2", "a", {"done": [[0, 7]]})
+    with open(ms._journal_path("t2"), "a") as f:
+        f.write('{"file": "b", "done": [[0,')  # crash mid-append
+    st = ms.load("t2")
+    assert st["files"] == {"a": {"done": [[0, 7]], "complete": False}}
+
+
+def test_marker_save_truncates_journal(tmp_path):
+    ms = MarkerStore(os.path.join(str(tmp_path), "m"))
+    ms.append("t3", "a", {"done": [[0, 7]]})
+    ms.save("t3", {"files": {"z": {"done": [], "complete": True}}})
+    assert not os.path.exists(ms._journal_path("t3"))
+    assert ms.load("t3") == {"files": {"z": {"done": [], "complete": True}}}
+
+
+# ---------------------------------------------------------------------------
+# O(1) structures
+# ---------------------------------------------------------------------------
+def test_interval_tracker_matches_merge_ranges():
+    rng = random.Random(11)
+    for _ in range(50):
+        ranges = [[rng.randint(0, 1000), rng.randint(1, 60)]
+                  for _ in range(rng.randint(1, 40))]
+        tr = IntervalTracker()
+        for off, ln in ranges:
+            tr.add(off, ln)
+        expect = _merge_ranges(ranges)
+        assert tr.ranges() == expect
+        assert tr.covered == sum(ln for _, ln in expect)
+
+
+def test_interval_tracker_seeded_and_adjacent():
+    tr = IntervalTracker([[10, 10], [0, 5]])
+    assert tr.ranges() == [[0, 5], [10, 10]]
+    tr.add(5, 5)  # bridges the gap exactly
+    assert tr.ranges() == [[0, 20]]
+    assert tr.covered == 20
+    tr.add(3, 4)  # fully inside
+    assert tr.ranges() == [[0, 20]] and tr.covered == 20
+
+
+def test_rate_samples_bounded(tmp_path):
+    from repro.core.transfer import TransferTask
+    task = TransferTask("rb")
+    for _ in range(3 * TransferTask.RATE_WINDOW):
+        task._bytes_tick(1)
+    assert len(task._rate_samples) == TransferTask.RATE_WINDOW
+    assert task.stats.bytes_done == 3 * TransferTask.RATE_WINDOW
+
+
+# ---------------------------------------------------------------------------
+# advisor-sized threshold
+# ---------------------------------------------------------------------------
+def test_advisor_coalesce_threshold():
+    m = PerfModel(route="r", t0=0.1, alpha=12.3, bytes_total=10**9, s0=2.3)
+    adv = Advisor([Route("r", m)])
+    # break-even: wire time of `threshold` bytes == t0
+    th = adv.coalesce_threshold()
+    assert th == int(0.1 * m.throughput)
+    flat = PerfModel(route="f", t0=0.0, alpha=10.0, bytes_total=10**9)
+    assert Advisor([Route("f", flat)]).coalesce_threshold() == 0
