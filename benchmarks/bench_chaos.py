@@ -1,0 +1,82 @@
+"""Chaos benchmark: goodput degradation vs injected fault rate.
+
+GridFTP's fault-tolerance line of work (and the paper's §4 retry story)
+argues that a transfer fabric is judged by its behaviour *under*
+failures, not beside them.  This bench sweeps a seed-deterministic
+probability of transient faults + rate-limit storms injected through a
+:class:`FaultProxyConnector` in front of an emulated S3 Connector and
+reports modeled transfer time, goodput, and how many faults the service
+absorbed.  Because decisions are hash-seeded, every row is reproducible.
+
+Emits: ``chaos.s3.pXX`` rows — model time plus
+``goodput=... faults=... fallbacks=...`` in the derived column.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.connectors import FaultProxyConnector
+from repro.core import Endpoint, FaultSchedule, TransferOptions
+
+from .common import MB, QUICK, emit, make_env, seed_local_files, split_dataset
+
+FAULT_RATES = (0.0, 0.05, 0.2) if QUICK else (0.0, 0.02, 0.05, 0.1, 0.2, 0.4)
+N_FILES = 16 if QUICK else 48
+FILE_KB = 128
+
+
+def _schedule(rate: float) -> FaultSchedule:
+    sched = FaultSchedule(seed=1234)
+    if rate > 0:
+        # mid-stream transients on block reads, per-file admission
+        # faults, and occasional quota storms — all scaled by the rate
+        sched.transient(op="read", prob=rate, times=None)
+        sched.transient(op="recv", prob=rate / 2, times=None)
+        sched.rate_limit(op="recv*", prob=rate / 4, times=None,
+                         retry_after=0.2)
+    return sched
+
+
+def run() -> dict:
+    out = {}
+    total = N_FILES * FILE_KB * 1024
+    for rate in FAULT_RATES:
+        with tempfile.TemporaryDirectory() as tmp:
+            env = make_env(tmp, virtual=True)
+            storage, conn = env.cloud("s3", "local")
+            sched = _schedule(rate)
+            proxy = FaultProxyConnector(conn, sched, clock=env.clock)
+            env.creds.register("chaos-dst",
+                               env.creds.lookup(conn.name))
+            parts = split_dataset(total, N_FILES)
+            src = seed_local_files(env, f"chaos{int(rate * 100):02d}", parts)
+            v0 = env.clock.virtual_elapsed
+            task = env.service.submit(
+                Endpoint(env.local, src),
+                Endpoint(proxy, f"bkt/chaos{int(rate * 100):02d}",
+                         "chaos-dst"),
+                TransferOptions(concurrency=4, startup_cost=0.0,
+                                retry_backoff=0.05), sync=True)
+            dt = env.clock.virtual_elapsed - v0
+            st = task.stats
+            goodput = st.bytes_done / max(dt, 1e-9) / MB
+            out[rate] = {"model_s": dt, "goodput_mb_s": goodput,
+                         "faults": st.faults_retried,
+                         "fallbacks": st.batch_fallbacks,
+                         "status": task.status}
+            emit(f"chaos.s3.p{int(rate * 100):02d}", dt,
+                 f"goodput={goodput:.1f}MB/s faults={st.faults_retried} "
+                 f"fallbacks={st.batch_fallbacks} "
+                 f"status={task.status.lower()}")
+    base = out[0.0]["goodput_mb_s"]
+    worst = out[max(FAULT_RATES)]["goodput_mb_s"]
+    emit("chaos.s3.degradation", 0.0,
+         f"x{base / max(worst, 1e-9):.2f} goodput loss at "
+         f"p={max(FAULT_RATES):.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

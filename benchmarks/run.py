@@ -48,13 +48,14 @@ def main() -> None:
                     help="small N / fewer providers")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: perfile,startup,"
-                         "throughput,integrity,intercloud,ckpt,data,kernels")
+                         "throughput,integrity,intercloud,chaos,ckpt,"
+                         "data,kernels")
     args = ap.parse_args()
     if args.quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"
 
     # import AFTER the env flag so common.py picks it up
-    from . import (bench_ckpt, bench_data, bench_integrity,
+    from . import (bench_chaos, bench_ckpt, bench_data, bench_integrity,
                    bench_intercloud, bench_kernels, bench_perfile,
                    bench_startup, bench_throughput)
 
@@ -64,6 +65,7 @@ def main() -> None:
         "throughput": bench_throughput.run,  # Figs 13-16
         "intercloud": bench_intercloud.run,  # Figs 17-18
         "integrity": bench_integrity.run,    # Figs 19-21
+        "chaos": bench_chaos.run,            # goodput vs fault rate
         "ckpt": bench_ckpt.run,              # framework: §8 coalescing
         "data": bench_data.run,              # framework: ingest
         "kernels": bench_kernels.run,        # framework: pallas kernels

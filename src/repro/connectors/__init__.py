@@ -1,6 +1,7 @@
 """Connector implementations (paper §4): POSIX + six emulated cloud
-storage services (AWS-S3, Wasabi, Google-Cloud, Google-Drive, Box, Ceph)
-plus an in-memory store for tests."""
+storage services (AWS-S3, Wasabi, Google-Cloud, Google-Drive, Box, Ceph),
+an in-memory store for tests, and a fault-proxy wrapper that replays a
+:class:`~repro.core.faults.FaultSchedule` against any of them."""
 
 from .posix import PosixConnector
 from .memory import MemoryConnector
@@ -11,6 +12,7 @@ from .cloud import (
     make_cloud,
     PROFILES,
 )
+from .faultproxy import FaultProxyConnector
 
 __all__ = [
     "PosixConnector",
@@ -20,4 +22,5 @@ __all__ = [
     "NativeClient",
     "make_cloud",
     "PROFILES",
+    "FaultProxyConnector",
 ]

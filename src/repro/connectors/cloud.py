@@ -21,11 +21,13 @@ Two access paths exist, matching the paper's experiment design:
 from __future__ import annotations
 
 import threading
+import warnings
 from dataclasses import dataclass, field, replace
 
 from ..core.clock import Clock, DEFAULT_CLOCK, Link, TokenBucket
 from ..core.connector import AppChannel, Connector, Credential, Session, StatInfo
 from ..core.errors import AuthError, FaultInjected, NotFound, RateLimitError
+from ..core.faults import FaultSchedule
 from .memory import BlobDict
 
 MB = 1024 * 1024
@@ -93,24 +95,49 @@ class CloudStorage:
     """The provider-side service: blobs + native API semantics."""
 
     def __init__(self, profile: StorageProfile, clock: Clock | None = None,
-                 fault_plan=None):
+                 fault_plan=None, faults: FaultSchedule | None = None):
         self.profile = profile
         self.clock = clock or DEFAULT_CLOCK
         self.blobs = BlobDict()
         self.quota = TokenBucket(profile.quota_rate, profile.quota_burst, self.clock)
-        self.fault_plan = fault_plan  # callable(op_name, index) -> bool(fail?)
+        #: shared fault-injection plan, replayed at API admission with
+        #: op names "put"/"put_part"/"get"/"stat"/"list"/"delete"/
+        #: "complete"/"checksum"/"copy" and the object key as the path
+        self.faults = faults or FaultSchedule()
+        if self.faults.clock is None:
+            self.faults.clock = self.clock
+        self._fault_plan = None
+        if fault_plan is not None:
+            self.fault_plan = fault_plan  # deprecation warning via setter
         self._op_index = 0
         self._fresh: dict[str, float] = {}  # key -> visible-at (virtual s)
         self._lock = threading.Lock()
 
+    @property
+    def fault_plan(self):
+        """Deprecated ad-hoc hook ``callable(op, index) -> bool(fail?)``;
+        use ``faults=FaultSchedule(...)`` instead."""
+        return self._fault_plan
+
+    @fault_plan.setter
+    def fault_plan(self, fn) -> None:
+        if fn is not None:
+            warnings.warn(
+                "CloudStorage.fault_plan is deprecated; compose a "
+                "repro.core.faults.FaultSchedule and pass it as "
+                "CloudStorage(faults=...) (or wrap any connector in "
+                "FaultProxyConnector)", DeprecationWarning, stacklevel=2)
+        self._fault_plan = fn
+
     # -- plumbing ---------------------------------------------------------
     def _admit(self, op: str, calls: int, link: Link,
-               pipeline: "ApiPipeline | None" = None) -> None:
+               pipeline: "ApiPipeline | None" = None, key: str = "") -> None:
         with self._lock:
             self._op_index += 1
             idx = self._op_index
-        if self.fault_plan is not None and self.fault_plan(op, idx):
+        if self._fault_plan is not None and self._fault_plan(op, idx):
             raise FaultInjected(f"{self.profile.provider}:{op}#{idx}")
+        self.faults.check(op, key)
         wait = self.quota.try_acquire(calls)
         if wait > 0:
             raise RateLimitError(
@@ -148,7 +175,7 @@ class CloudStorage:
     # -- native API (boto3-ish) --------------------------------------------
     def api_put(self, key: str, data: bytes, link: Link, streams: int = 1,
                 pipeline: "ApiPipeline | None" = None) -> None:
-        self._admit("put", self.profile.put_calls, link, pipeline)
+        self._admit("put", self.profile.put_calls, link, pipeline, key)
         self._payload(link, len(data), streams)
         self.blobs.put(key, data)
         self._mark_fresh(key)
@@ -157,19 +184,19 @@ class CloudStorage:
                       streams: int = 1,
                       pipeline: "ApiPipeline | None" = None) -> None:
         """One part of a multipart upload (1 call per part)."""
-        self._admit("put_part", 1, link, pipeline)
+        self._admit("put_part", 1, link, pipeline, key)
         self._payload(link, len(data), streams)
         self.blobs.put_range(key, offset, data)
         self._mark_fresh(key)
 
     def api_complete_multipart(self, key: str, link: Link,
                                pipeline: "ApiPipeline | None" = None) -> None:
-        self._admit("complete", 1, link, pipeline)
+        self._admit("complete", 1, link, pipeline, key)
 
     def api_get(self, key: str, link: Link, offset: int = 0,
                 length: int | None = None, streams: int = 1,
                 pipeline: "ApiPipeline | None" = None) -> bytes:
-        self._admit("get", self.profile.get_calls, link, pipeline)
+        self._admit("get", self.profile.get_calls, link, pipeline, key)
         if not self.blobs.exists(key):
             raise NotFound(key)
         size = self.blobs.size(key)
@@ -181,7 +208,7 @@ class CloudStorage:
 
     def api_stat(self, key: str, link: Link,
                  pipeline: "ApiPipeline | None" = None) -> StatInfo:
-        self._admit("stat", 1, link, pipeline)
+        self._admit("stat", 1, link, pipeline, key)
         if self.blobs.exists(key) and self._visible(key):
             return StatInfo(name=key, size=self.blobs.size(key),
                             mtime=self.blobs.mtime(key))
@@ -191,12 +218,12 @@ class CloudStorage:
         raise NotFound(key)
 
     def api_list(self, prefix: str, link: Link) -> tuple[list[str], list[str]]:
-        self._admit("list", 1, link)
+        self._admit("list", 1, link, key=prefix)
         objs, dirs = self.blobs.list_prefix(prefix)
         return [k for k in objs if self._visible(k)], dirs
 
     def api_delete(self, key: str, link: Link) -> None:
-        self._admit("delete", 1, link)
+        self._admit("delete", 1, link, key=key)
         self.blobs.delete(key)
 
     def api_checksum(self, key: str, link: Link, algorithm: str) -> str:
@@ -204,7 +231,7 @@ class CloudStorage:
         expose ETag/x-goog-hash/GetObjectAttributes).  Costs one control
         round-trip + a service-internal read — NO egress re-read, which
         is the §7/§8.2 integrity tax this eliminates."""
-        self._admit("checksum", 1, link)
+        self._admit("checksum", 1, link, key=key)
         data = self.blobs.get(key)
         self.clock.sleep(len(data) / self.profile.intra_bw)
         from ..core.integrity import hasher
@@ -234,11 +261,12 @@ class ApiPipeline:
             / self.depth)
 
 
-def make_cloud(provider: str, clock: Clock | None = None, **overrides) -> CloudStorage:
+def make_cloud(provider: str, clock: Clock | None = None,
+               faults: FaultSchedule | None = None, **overrides) -> CloudStorage:
     prof = PROFILES[provider]
     if overrides:
         prof = replace(prof, **overrides)
-    return CloudStorage(prof, clock=clock)
+    return CloudStorage(prof, clock=clock, faults=faults)
 
 
 class ObjectStoreConnector(Connector):
@@ -318,16 +346,16 @@ class ObjectStoreConnector(Connector):
             if not objs:
                 raise NotFound(path)
             for k in objs:
-                self._admit_copy()
+                self._admit_copy(k)
                 self.storage.blobs.put(to + k[len(key):],
                                        self.storage.blobs.get(k))
                 self.storage.blobs.delete(k)
         else:
             raise NotFound(op)
 
-    def _admit_copy(self) -> None:
+    def _admit_copy(self, key: str) -> None:
         """Server-side COPY: control-plane cost only."""
-        self.storage._admit("copy", 1, self.access_link)
+        self.storage._admit("copy", 1, self.access_link, key=key)
 
     # -- data ----------------------------------------------------------------
     def send(self, session: Session, path: str, channel: AppChannel) -> None:
@@ -390,6 +418,10 @@ class ObjectStoreConnector(Connector):
         self._pool(channel, worker)
         if wrote[0] and not err:
             self.storage.api_complete_multipart(key, self.access_link)
+        elif not err and not self.storage.blobs.exists(key):
+            # nothing claimed = zero-byte target: a real store would
+            # still create the (empty) object
+            self.storage.api_put(key, b"", self.access_link)
         channel.finished(err[0] if err else None)
         if err:
             raise err[0]
@@ -463,7 +495,11 @@ class ObjectStoreConnector(Connector):
                             break
                         parts.append((rng.offset + done, data))
                         done += len(data)
-                if not parts:  # nothing claimed: match per-file semantics
+                if not parts:  # nothing claimed: zero-byte target — still
+                    # create the (empty) object, matching per-file recv
+                    if not self.storage.blobs.exists(key):
+                        self.storage.api_put(key, b"", self.access_link,
+                                             pipeline=pipeline)
                     channel.finished(None)
                     return
                 parts.sort()

@@ -167,6 +167,9 @@ class MemoryConnector(Connector):
     def recv(self, session: Session, path: str, channel: AppChannel) -> None:
         session.check()
         key = self._key(path)
+        # materialize the object up front (posix pre-creates the file the
+        # same way) so a zero-byte transfer still produces an object
+        self.store.put_range(key, 0, b"")
         bs = channel.get_blocksize()
         while True:
             rng = channel.get_read_range()

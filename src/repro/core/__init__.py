@@ -6,7 +6,9 @@
 from .connector import (AppChannel, ByteRange, Connector, Credential,
                         Session, StatInfo, iter_files)
 from .errors import (AuthError, ConnectorError, FaultInjected, IntegrityError,
-                     NotFound, PermanentError, RateLimitError, TransientError)
+                     NotFound, PermanentError, RateLimitError, TransientError,
+                     TruncatedStream)
+from .faults import FaultEvent, FaultRule, FaultSchedule
 from .transfer import (CredentialStore, Endpoint, TransferOptions,
                        TransferService, TransferTask)
 from .perfmodel import (Advisor, PerfModel, Route, fit_linear, fit_perf_model,
@@ -19,6 +21,8 @@ __all__ = [
     "StatInfo", "iter_files",
     "AuthError", "ConnectorError", "FaultInjected", "IntegrityError",
     "NotFound", "PermanentError", "RateLimitError", "TransientError",
+    "TruncatedStream",
+    "FaultEvent", "FaultRule", "FaultSchedule",
     "CredentialStore", "Endpoint", "TransferOptions", "TransferService",
     "TransferTask",
     "Advisor", "PerfModel", "Route", "fit_linear", "fit_perf_model",

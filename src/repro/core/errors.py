@@ -35,6 +35,13 @@ class FaultInjected(TransientError):
     """Deterministic fault injected by a test/benchmark profile."""
 
 
+class TruncatedStream(TransientError):
+    """A data stream ended before the planned byte count and the source
+    still reports the full size: the stream was cut (connection died,
+    proxy fault, ...), not the file shrunk.  Retryable — the next
+    attempt re-claims the remaining holes."""
+
+
 class NotFound(PermanentError):
     pass
 

@@ -51,7 +51,8 @@ from dataclasses import dataclass, field
 from .clock import Clock, DEFAULT_CLOCK, Link, loopback
 from .connector import (AppChannel, ByteRange, Connector, Credential, Session,
                         iter_files)
-from .errors import IntegrityError, TransientError
+from .errors import (IntegrityError, PermanentError, TransientError,
+                     TruncatedStream)
 from .integrity import hasher
 
 MB = 1024 * 1024
@@ -133,6 +134,11 @@ class TaskStats:
     files_failed: int = 0
     faults_retried: int = 0
     integrity_failures: int = 0
+    #: files a coalesced batch handed back to the per-file retry path
+    batch_fallbacks: int = 0
+    #: transient-fault retries keyed by error class name (observability
+    #: for fault schedules: RateLimitError / FaultInjected / ...)
+    retries_by_kind: dict = field(default_factory=dict)
     wall_seconds: float = 0.0
     effective_concurrency: float = 0.0
 
@@ -165,6 +171,19 @@ class TransferTask:
         with self._lock:
             self.stats.bytes_done += n
             self._rate_samples.append((time.monotonic(), self.stats.bytes_done))
+
+    def _note_fault(self, err: Exception) -> None:
+        """Account one transient fault the service will work around, by
+        error class — makes a fault schedule observable in TaskStats."""
+        with self._lock:
+            self.stats.faults_retried += 1
+            kind = type(err).__name__
+            self.stats.retries_by_kind[kind] = \
+                self.stats.retries_by_kind.get(kind, 0) + 1
+
+    def _note_batch_fallback(self) -> None:
+        with self._lock:
+            self.stats.batch_fallbacks += 1
 
     def throughput(self, window: float = 2.0) -> float:
         """Instantaneous B/s over the trailing window (perf markers)."""
@@ -848,13 +867,20 @@ class TransferService:
                     e.pipe.fail(exc)
             sender.join()
 
+        # one batch-level exception fails every pipe with the SAME error
+        # object; count it once, not once per entry, so faults_retried
+        # stays 1:1 with the faults that actually occurred
+        counted_errs: set[int] = set()
         for e in entries:
             e.st["done"] = e.tracker.ranges()
             err = e.pipe._error
             complete = e.size == 0 or e.tracker.covered >= e.size
             if err is not None or not complete:
-                if isinstance(err, TransientError):
-                    task.stats.faults_retried += 1
+                if isinstance(err, TransientError) \
+                        and id(err) not in counted_errs:
+                    counted_errs.add(id(err))
+                    task._note_fault(err)
+                task._note_batch_fallback()
                 task.log(f"batch: {e.spath} fell back to per-file path "
                          f"({type(err).__name__ if err else 'incomplete'})")
                 fallback.append((e.spath, e.dpath, e.size))
@@ -875,6 +901,7 @@ class TransferService:
                         task._bytes_tick(-e.tracker.covered)
                         e.st["done"] = []
                         e.st["complete"] = False
+                        task._note_batch_fallback()
                         fallback.append((e.spath, e.dpath, e.size))
                         continue
                 e.st["complete"] = True
@@ -886,6 +913,9 @@ class TransferService:
                 # no finalize error may escape the worker thread (that
                 # would silently drop the remaining work items) — the
                 # per-file path classifies and records it instead
+                if isinstance(exc, TransientError):
+                    task._note_fault(exc)
+                task._note_batch_fallback()
                 task.log(f"batch: finalize error on {e.dpath} "
                          f"({type(exc).__name__}); per-file fallback")
                 e.st["complete"] = False
@@ -942,7 +972,7 @@ class TransferService:
                 task.files.append(result)
                 return
             except TransientError as e:
-                task.stats.faults_retried += 1
+                task._note_fault(e)
                 if attempts > opt.max_retries:
                     result.error = f"retries exhausted: {e}"
                     break
@@ -1024,6 +1054,22 @@ class TransferService:
             raise send_err[0]
         if recv_err is not None:
             raise recv_err
+        if size > 0 and tracker.covered < size:
+            # The stream ended short of plan.  Distinguish a source that
+            # shrank since expansion (stat now reports no more than what
+            # landed: accept what exists) from a cut stream — truncated
+            # write, dropped connection — where the source still holds
+            # the missing bytes and the hole must be re-claimed.  Only a
+            # *permanent* stat failure means the source is gone; a
+            # transient one must propagate to the retry loop, or a short
+            # file would be silently accepted as complete.
+            try:
+                now_size = src.connector.stat(s_src, spath).size
+            except PermanentError:
+                now_size = tracker.covered  # source gone: keep what landed
+            if now_size > tracker.covered:
+                raise TruncatedStream(
+                    f"{dpath}: {tracker.covered} of {size} bytes landed")
         full = len(holes) == 1 and holes[0].offset == 0 and holes[0].length == size
         if opt.integrity and not full:
             # resumed/holey transfer: the streaming hash didn't see the

@@ -1,0 +1,355 @@
+"""Deterministic failure-scenario harness for the transfer service.
+
+A scenario is ``(source tree, connector route, fault schedule, transfer
+options)``.  :class:`ScenarioRunner` materializes the tree at the source,
+wraps either end of the route in a
+:class:`~repro.connectors.faultproxy.FaultProxyConnector`, runs the
+managed :class:`~repro.core.transfer.TransferService`, and verifies the
+end-state invariants that make a transfer fabric trustworthy under
+chaos:
+
+* the task always *finishes* (never wedges), within a wall-clock bound;
+* on success the destination tree is byte-exact, every file result is
+  ``ok``, ``bytes_done == bytes_total``, and the restart-marker journal
+  is cleared;
+* on failure every failed file carries an error, and every file the
+  task *did* mark ok is still byte-exact at the destination;
+* with an empty schedule no faults are retried (the fabric doesn't
+  invent failures).
+
+Determinism: trees are generated from a seeded RNG and schedules make
+hash-based decisions (see :mod:`repro.core.faults`), so the same seed
+replays the same fault sequence into the same ``TaskStats`` — that is
+what makes a chaos failure reproducible enough to debug.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Callable
+
+from ..connectors import (MemoryConnector, ObjectStoreConnector,
+                          PosixConnector, make_cloud)
+from ..connectors.faultproxy import FaultProxyConnector
+from ..core import (Credential, CredentialStore, Endpoint, TransferOptions,
+                    TransferService)
+from ..core.clock import Clock
+from ..core.faults import FaultSchedule
+
+KB = 1024
+MB = 1024 * 1024
+
+#: every generated tree lives under this source root and lands under "out"
+SRC_ROOT = "data"
+DST_ROOT = "out"
+
+
+# --------------------------------------------------------------------------
+# canonical source trees
+# --------------------------------------------------------------------------
+def _tree_many_small(rng: random.Random):
+    files = {f"{SRC_ROOT}/sub{i % 4}/f{i:03d}.bin":
+             rng.randbytes(rng.randint(1, 8 * KB)) for i in range(24)}
+    return files, []
+
+
+def _tree_few_large(rng: random.Random):
+    files = {f"{SRC_ROOT}/big{i}.bin":
+             rng.randbytes(rng.randint(1 * MB, 2 * MB + 4097))
+             for i in range(3)}
+    return files, []
+
+
+def _tree_mixed(rng: random.Random):
+    sizes = [0, 1, 137, 4 * KB, 64 * KB, 300 * KB, 3 * MB // 2]
+    files = {}
+    for i in range(14):
+        d = rng.choice(["", "a/", "a/b/"])
+        files[f"{SRC_ROOT}/{d}m{i:02d}.bin"] = rng.randbytes(rng.choice(sizes))
+    return files, [f"{SRC_ROOT}/hollow"]
+
+
+def _tree_deep(rng: random.Random):
+    files = {}
+    for i in range(8):
+        depth = rng.randint(1, 5)
+        d = "/".join(f"lvl{j}" for j in range(depth))
+        files[f"{SRC_ROOT}/{d}/deep{i}.bin"] = \
+            rng.randbytes(rng.randint(1, 16 * KB))
+    return files, [f"{SRC_ROOT}/lvl0/empty", f"{SRC_ROOT}/void"]
+
+
+def _tree_zero_byte(rng: random.Random):
+    files = {f"{SRC_ROOT}/z{i}.bin": b"" for i in range(4)}
+    files.update({f"{SRC_ROOT}/s{i}.bin":
+                  rng.randbytes(rng.randint(1, 2 * KB)) for i in range(4)})
+    return files, []
+
+
+def _tree_unicode(rng: random.Random):
+    names = [f"{SRC_ROOT}/ünïcødé/файл-1.bin",
+             f"{SRC_ROOT}/数据/ファイル 2.bin",
+             f"{SRC_ROOT}/emoji-✨/naïve 3.bin",
+             f"{SRC_ROOT}/ünïcødé/plain.bin"]
+    return {n: rng.randbytes(rng.randint(1, 8 * KB)) for n in names}, []
+
+
+TREES: dict[str, Callable] = {
+    "many-small": _tree_many_small,
+    "few-large": _tree_few_large,
+    "mixed": _tree_mixed,
+    "deep": _tree_deep,
+    "zero-byte": _tree_zero_byte,
+    "unicode": _tree_unicode,
+}
+
+#: connector routes; "cloud" is the emulated object store behind the
+#: Connector (paper §4) — posix / memory / conn coverage
+ROUTES = ("posix->memory", "memory->posix", "posix->cloud",
+          "cloud->memory", "cloud->cloud", "posix->posix")
+
+
+def canonical_tree(kind: str, seed: int = 0):
+    """(files, empty_dirs) for one canonical tree, deterministic in
+    ``seed``.  ``files`` maps ``data/...`` paths to payload bytes.
+    (String seeding is deterministic across processes, unlike hashing a
+    tuple under PYTHONHASHSEED randomization.)"""
+    return TREES[kind](random.Random(f"{kind}|{seed}"))
+
+
+# --------------------------------------------------------------------------
+# results + invariants
+# --------------------------------------------------------------------------
+@dataclass
+class ScenarioResult:
+    task: object
+    schedule: FaultSchedule | None
+    expected: dict[str, bytes]          # rel path -> bytes
+    dest: dict[str, bytes]              # rel path -> bytes (as landed)
+    violations: list[str] = field(default_factory=list)
+    route: str = ""
+    tree: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def fingerprint(self) -> dict:
+        """Thread-order-independent digest of the run, for comparing
+        same-seed replays (wall time deliberately excluded)."""
+        st = self.task.stats
+        return {
+            "status": self.task.status,
+            "files_total": st.files_total,
+            "files_done": st.files_done,
+            "files_failed": st.files_failed,
+            "bytes_total": st.bytes_total,
+            "bytes_done": st.bytes_done,
+            "faults_retried": st.faults_retried,
+            "integrity_failures": st.integrity_failures,
+            "batch_fallbacks": st.batch_fallbacks,
+            "retries_by_kind": dict(sorted(st.retries_by_kind.items())),
+            "events": tuple(self.schedule.sorted_events())
+            if self.schedule is not None else (),
+        }
+
+
+def check_invariants(task, expected: dict[str, bytes],
+                     dest: dict[str, bytes], schedule: FaultSchedule | None,
+                     markers_after: dict, finished: bool,
+                     integrity: bool) -> list[str]:
+    """End-state invariants every chaos run must satisfy.  Returns a
+    list of human-readable violations (empty = all held)."""
+    v: list[str] = []
+    if not finished:
+        v.append("wedged: task did not finish within the timeout")
+        return v
+    st = task.stats
+    if st.files_done + st.files_failed != st.files_total:
+        v.append(f"accounting: done {st.files_done} + failed "
+                 f"{st.files_failed} != total {st.files_total}")
+    if not 0 <= st.bytes_done <= st.bytes_total:
+        v.append(f"accounting: bytes_done {st.bytes_done} outside "
+                 f"[0, {st.bytes_total}]")
+    if schedule is not None and not schedule.rules and st.faults_retried:
+        v.append(f"phantom faults: {st.faults_retried} retries with an "
+                 f"empty schedule")
+    if task.status == task.SUCCEEDED:
+        if st.files_failed:
+            v.append("succeeded with failed files")
+        if st.bytes_done != st.bytes_total:
+            v.append(f"succeeded with bytes_done {st.bytes_done} != "
+                     f"bytes_total {st.bytes_total}")
+        if dest != expected:
+            missing = sorted(set(expected) - set(dest))[:3]
+            extra = sorted(set(dest) - set(expected))[:3]
+            diff = sorted(k for k in set(dest) & set(expected)
+                          if dest[k] != expected[k])[:3]
+            v.append(f"dest tree not byte-exact (missing={missing} "
+                     f"extra={extra} differing={diff})")
+        if markers_after != {"files": {}}:
+            v.append(f"markers not cleared after success: {markers_after}")
+        for fr in task.files:
+            if not fr.ok:
+                v.append(f"succeeded but file result not ok: {fr.src}")
+            elif integrity and fr.checksum is None:
+                v.append(f"integrity on but no checksum recorded: {fr.src}")
+    else:
+        for fr in task.files:
+            if not fr.ok and not fr.error:
+                v.append(f"failed file without recorded error: {fr.src}")
+            if fr.ok:
+                rel = fr.dst[len(DST_ROOT) + 1:] if fr.dst.startswith(
+                    DST_ROOT + "/") else fr.dst
+                if dest.get(rel) != expected.get(rel):
+                    v.append(f"file marked ok but not byte-exact: {fr.src}")
+    return v
+
+
+# --------------------------------------------------------------------------
+# the runner
+# --------------------------------------------------------------------------
+class ScenarioRunner:
+    """Builds a route, seeds a tree, runs the service under a schedule,
+    and checks invariants.  Each ``run`` gets a fresh subdirectory of
+    ``base_dir`` (posix roots + restart markers), so runs are isolated
+    and a seeded run replays exactly."""
+
+    def __init__(self, base_dir: str, clock: Clock | None = None):
+        self.base_dir = base_dir
+        self.clock = clock or Clock()
+        self._n = 0
+        self._lock = threading.Lock()
+
+    # ---- route construction -------------------------------------------
+    def _make_end(self, kind: str, run_dir: str, sub: str, provider: str):
+        """One side of a route: (connector, seed_fn, read_fn)."""
+        if kind == "posix":
+            root = os.path.join(run_dir, sub)
+            conn = PosixConnector(root)
+
+            def seed(files, empty_dirs):
+                for name, payload in files.items():
+                    p = os.path.join(root, name)
+                    os.makedirs(os.path.dirname(p), exist_ok=True)
+                    with open(p, "wb") as f:
+                        f.write(payload)
+                for d in empty_dirs:
+                    os.makedirs(os.path.join(root, d), exist_ok=True)
+
+            def read():
+                out = {}
+                base = os.path.join(root, DST_ROOT)
+                for dirpath, _, filenames in os.walk(base):
+                    for fn in filenames:
+                        p = os.path.join(dirpath, fn)
+                        rel = os.path.relpath(p, base).replace(os.sep, "/")
+                        with open(p, "rb") as f:
+                            out[rel] = f.read()
+                return out
+
+            return conn, seed, read
+
+        if kind == "memory":
+            conn = MemoryConnector()
+
+            def seed(files, empty_dirs):
+                for name, payload in files.items():
+                    conn.store.put(name, payload)
+
+            def read():
+                pfx = DST_ROOT + "/"
+                return {k[len(pfx):]: conn.store.get(k)
+                        for k in conn.store.keys() if k.startswith(pfx)}
+
+            return conn, seed, read
+
+        if kind == "cloud":
+            storage = make_cloud(provider, clock=self.clock)
+            placement = "cloud" if provider == "gcs" else "local"
+            conn = ObjectStoreConnector(storage, placement=placement,
+                                        clock=self.clock)
+
+            def seed(files, empty_dirs):
+                for name, payload in files.items():
+                    storage.blobs.put(name, payload)
+
+            def read():
+                pfx = DST_ROOT + "/"
+                return {k[len(pfx):]: storage.blobs.get(k)
+                        for k in storage.blobs.keys() if k.startswith(pfx)}
+
+            return conn, seed, read
+
+        raise ValueError(f"unknown route end {kind!r}")
+
+    # ---- one scenario ---------------------------------------------------
+    def run(self, tree="mixed", route: str = "posix->memory",
+            schedule: FaultSchedule | None = None,
+            options: TransferOptions | None = None, proxy: str = "dst",
+            seed: int = 0, timeout: float = 120.0,
+            strict: bool = False) -> ScenarioResult:
+        """Run one scenario.  ``tree`` is a canonical-tree name or a
+        literal ``{data/...: bytes}`` mapping; ``proxy`` picks which
+        route end(s) get the fault proxy: "src" | "dst" | "both" |
+        "none".  ``strict=True`` raises AssertionError on any invariant
+        violation."""
+        with self._lock:
+            self._n += 1
+            run_dir = os.path.join(self.base_dir, f"run{self._n:03d}")
+        os.makedirs(run_dir, exist_ok=True)
+
+        if isinstance(tree, str):
+            files, empty_dirs = canonical_tree(tree, seed)
+        else:
+            files, empty_dirs, tree = dict(tree), [], "<literal>"
+        src_kind, dst_kind = route.split("->")
+        src_conn, seed_src, _ = self._make_end(src_kind, run_dir, "srcfs",
+                                               provider="s3")
+        dst_conn, _, read_dst = self._make_end(
+            dst_kind, run_dir, "dstfs",
+            provider="gcs" if src_kind == "cloud" else "s3")
+        seed_src(files, empty_dirs)
+
+        if schedule is not None and schedule.clock is None:
+            schedule.clock = self.clock
+        if schedule is not None and proxy in ("src", "both"):
+            src_conn = FaultProxyConnector(src_conn, schedule)
+        if schedule is not None and proxy in ("dst", "both"):
+            dst_conn = FaultProxyConnector(dst_conn, schedule)
+
+        creds = CredentialStore()
+        for ep_id, conn in (("src-ep", src_conn), ("dst-ep", dst_conn)):
+            creds.register(ep_id, Credential(
+                conn.credential_scheme or "local-user", {"token": "t"}))
+        service = TransferService(
+            credential_store=creds,
+            marker_root=os.path.join(run_dir, "markers"), clock=self.clock)
+
+        options = options or TransferOptions(
+            startup_cost=0.0, retry_backoff=0.01, concurrency=2)
+        task = service.submit(Endpoint(src_conn, SRC_ROOT, "src-ep"),
+                              Endpoint(dst_conn, DST_ROOT, "dst-ep"),
+                              options, task_id=f"chaos-{self._n:03d}")
+        finished = task.wait(timeout=timeout)
+
+        expected = {name[len(SRC_ROOT) + 1:]: payload
+                    for name, payload in files.items()}
+        dest = read_dst() if finished else {}
+        markers_after = service.markers.load(task.task_id) if finished \
+            else {"files": {"unfinished": True}}
+        violations = check_invariants(task, expected, dest, schedule,
+                                      markers_after, finished,
+                                      options.integrity)
+        result = ScenarioResult(task=task, schedule=schedule,
+                                expected=expected, dest=dest,
+                                violations=violations, route=route, tree=tree)
+        if strict and violations:
+            raise AssertionError(
+                f"scenario {tree} over {route} violated invariants:\n  "
+                + "\n  ".join(violations)
+                + f"\n  last events: {task.events[-5:]}")
+        return result

@@ -8,6 +8,18 @@ os.environ.setdefault("REPRO_TIME_SCALE", "0.0")  # pure accounting, no sleeps
 
 import pytest  # noqa: E402
 
+# Property suites (hypothesis-based where available) must not push tier-1
+# past the seed runtime: cap examples and kill the per-example deadline
+# (the emulation's model-clock accounting is bursty under load).
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("tier1", max_examples=16, deadline=None,
+                                   derandomize=True)
+    _hyp_settings.load_profile("tier1")
+except ImportError:  # container without hypothesis: suites fall back to
+    pass             # seeded parametrization (see tests/test_chaos_properties)
+
 
 @pytest.fixture()
 def tmp_root(tmp_path):

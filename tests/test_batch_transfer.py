@@ -9,8 +9,9 @@ import threading
 
 import pytest
 
-from repro.core import (Credential, CredentialStore, Endpoint,
-                        TransferOptions, TransferService, checksum_bytes)
+from repro.core import (Connector, Credential, CredentialStore, Endpoint,
+                        FaultInjected, FaultSchedule, TransferOptions,
+                        TransferService, checksum_bytes)
 from repro.core.clock import Clock, Link
 from repro.core.perfmodel import Advisor, PerfModel, Route
 from repro.core.transfer import IntervalTracker, MarkerStore, _merge_ranges
@@ -249,16 +250,10 @@ def test_batch_fault_contained_and_retried(tmp_path):
     svc, creds, clock = make_service(tmp_path)
     files = {f"d/f{i}.bin": os.urandom(16 * KB) for i in range(8)}
     src = seeded_posix(tmp_path, files)
-    storage = make_cloud("s3", clock=clock)
-    fails = {"n": 0}
-
-    def fault_plan(op, idx):
-        if op == "put" and fails["n"] < 2:
-            fails["n"] += 1
-            return True
-        return False
-
-    storage.fault_plan = fault_plan
+    storage = make_cloud(
+        "s3", clock=clock,
+        faults=FaultSchedule().transient(op="put", at=1, times=2,
+                                         scope="global"))
     dst = ObjectStoreConnector(storage, placement="local", clock=clock)
     creds.register(dst.name, Credential("s3-keypair", {}))
     task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", dst.name),
@@ -365,6 +360,111 @@ def test_bytes_done_not_overcounted_on_integrity_resend(tmp_path, size):
     assert task.stats.bytes_done == task.stats.bytes_total  # no over-count
     for name, payload in files.items():
         assert dst.store.get("out/" + name[len("d/"):]) == payload
+
+
+# ---------------------------------------------------------------------------
+# recv_batch per-file fallback + batch-scheduler edge trees
+# ---------------------------------------------------------------------------
+class NoBatchMemory(MemoryConnector):
+    """Memory connector stripped back to the *default* Connector batch
+    implementations (per-file fallback loop with contained errors)."""
+
+    send_batch = Connector.send_batch
+    recv_batch = Connector.recv_batch
+
+
+class FlakyRecvMemory(NoBatchMemory):
+    """First recv for one path raises a transient fault — exercises the
+    default recv_batch's error containment via channel.finished(e)."""
+
+    def __init__(self, flaky_path):
+        super().__init__()
+        self.flaky_path = flaky_path
+        self._failed = False
+
+    def recv(self, session, path, channel):
+        if path == self.flaky_path and not self._failed:
+            self._failed = True
+            raise FaultInjected(f"flaky recv {path}")
+        super().recv(session, path, channel)
+
+
+def test_default_recv_batch_fallback_contains_per_file_fault(tmp_path):
+    """The base-class recv_batch (per-file fallback) must contain one
+    bad file: batch-mates land, the bad file retries per-file."""
+    svc, creds, clock = make_service(tmp_path)
+    files = {f"d/f{i}.bin": os.urandom(4 * KB) for i in range(6)}
+    src = seeded_posix(tmp_path, files)
+    dst = FlakyRecvMemory("out/f3.bin")
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(startup_cost=0.0, retry_backoff=0.001),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert dst._failed  # the fault actually fired inside the batch
+    assert task.stats.batch_fallbacks >= 1
+    assert task.stats.retries_by_kind.get("FaultInjected", 0) >= 1
+    for name, payload in files.items():
+        assert dst.store.get("out/" + name[len("d/"):]) == payload
+
+
+def test_default_send_batch_fallback_roundtrip(tmp_path):
+    """Source side of the default (per-file) bulk API."""
+    svc, creds, clock = make_service(tmp_path)
+    src = NoBatchMemory()
+    files = {f"d/g{i}.bin": os.urandom(2 * KB) for i in range(5)}
+    for name, payload in files.items():
+        src.store.put(name, payload)
+    dst = PosixConnector(os.path.join(str(tmp_path), "nb"))
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(startup_cost=0.0), sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    for name, payload in files.items():
+        with open(os.path.join(str(tmp_path), "nb", "out",
+                               name[len("d/"):]), "rb") as f:
+            assert f.read() == payload
+
+
+EDGE_TREE = {
+    "d/zero.bin": b"",
+    "d/sub/zero2.bin": b"",
+    "d/ünïcødé/файл.bin": b"unicode payload",
+    "d/数据/ファイル 2.bin": b"x" * (3 * KB),
+    "d/plain.bin": b"y" * 257,
+}
+
+
+@pytest.mark.parametrize("dst_kind", sorted(DSTS))
+def test_zero_byte_and_unicode_through_batch_scheduler(tmp_path, dst_kind):
+    """Zero-byte files, empty source dirs, and unicode names must ride
+    the coalesced batch path and land byte-exact — including the empty
+    objects, which every connector now materializes."""
+    svc, creds, clock = make_service(tmp_path)
+    src = seeded_posix(tmp_path, EDGE_TREE)
+    os.makedirs(os.path.join(str(tmp_path), "src", "d", "hollow"),
+                exist_ok=True)  # empty dir: expands to no files, no error
+    dst, ep_id, read = DSTS[dst_kind](tmp_path, creds, clock)
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out", ep_id),
+                      TransferOptions(startup_cost=0.0, integrity=True),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert task.stats.files_done == len(EDGE_TREE)
+    assert task.stats.bytes_done == task.stats.bytes_total
+    for name, payload in EDGE_TREE.items():
+        assert read("out/" + name[len("d/"):]) == payload
+
+
+def test_zero_byte_files_materialized_unbatched(tmp_path):
+    """Same edge tree with batching disabled: per-file path must also
+    create empty destination objects."""
+    svc, creds, clock = make_service(tmp_path)
+    src = seeded_posix(tmp_path, EDGE_TREE, sub="src2")
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "d"), Endpoint(dst, "out"),
+                      TransferOptions(startup_cost=0.0, coalesce_threshold=0),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert dst.store.get("out/zero.bin") == b""
+    assert dst.store.get("out/sub/zero2.bin") == b""
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,293 @@
+"""Chaos-grade fault injection: the FaultProxyConnector + FaultSchedule
+DSL + ScenarioRunner harness (ISSUE 2 tentpole).
+
+Exercises the six canonical failure modes — transient, rate-limit storm,
+bit-flip (integrity repair), session drop mid-batch, truncated stream,
+latency spike — against posix / memory / emulated-cloud routes, and
+asserts the end-state invariants hold: byte-exact trees, cleared
+markers, consistent TaskStats, reproducible seeded runs."""
+
+import os
+import time
+
+import pytest
+
+from repro.connectors import (FaultProxyConnector, MemoryConnector,
+                              ObjectStoreConnector, PosixConnector,
+                              make_cloud)
+from repro.core import (Credential, CredentialStore, Endpoint, FaultSchedule,
+                        TransferOptions, TransferService)
+from repro.core.clock import Clock
+from repro.core.errors import FaultInjected, RateLimitError
+from repro.sim import ROUTES, TREES, ScenarioRunner, canonical_tree
+
+KB = 1024
+MB = 1024 * 1024
+
+pytestmark = pytest.mark.chaos
+
+#: the three-route coverage demanded by the acceptance criteria:
+#: conn (emulated cloud), posix, memory all appear on both ends
+CHAOS_ROUTES = ("posix->memory", "posix->cloud", "cloud->memory")
+
+
+@pytest.fixture()
+def runner(tmp_path):
+    return ScenarioRunner(str(tmp_path), clock=Clock(scale=0.0))
+
+
+# ---------------------------------------------------------------------------
+# baseline: every canonical tree over every route, no faults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tree", sorted(TREES))
+def test_trees_clean_over_default_route(runner, tree):
+    res = runner.run(tree=tree, route="posix->memory", strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert res.dest == res.expected  # includes zero-byte + unicode names
+
+
+@pytest.mark.parametrize("route", ROUTES)
+def test_routes_clean_with_empty_schedule(runner, route):
+    res = runner.run(tree="mixed", route=route,
+                     schedule=FaultSchedule(seed=1), proxy="both", strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert res.task.stats.faults_retried == 0  # fabric invents no faults
+
+
+# ---------------------------------------------------------------------------
+# the six failure modes x three routes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_transient_fault_recovers(runner, route):
+    sched = FaultSchedule(seed=2).transient(op="recv*", at=1, times=1)
+    res = runner.run(tree="mixed", route=route, schedule=sched, strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("transient") >= 1
+    assert res.task.stats.retries_by_kind.get("FaultInjected", 0) >= 1
+
+
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_rate_limit_storm_recovers(runner, route):
+    sched = FaultSchedule(seed=3).rate_limit(op="recv*", at=1, times=1,
+                                             retry_after=0.25)
+    res = runner.run(tree="many-small", route=route, schedule=sched,
+                     strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("rate_limit") >= 1
+    assert res.task.stats.retries_by_kind.get("RateLimitError", 0) >= 1
+
+
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_bit_flip_triggers_integrity_repair(runner, route):
+    sched = FaultSchedule(seed=4).bit_flip(at=1, times=1)
+    res = runner.run(tree="few-large", route=route, schedule=sched,
+                     options=TransferOptions(startup_cost=0.0, integrity=True,
+                                             retry_backoff=0.01),
+                     strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("bit_flip") >= 1
+    assert res.task.stats.integrity_failures >= 1
+    assert res.dest == res.expected  # repaired, not silently corrupt
+
+
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_session_drop_mid_batch_contained(runner, route):
+    sched = FaultSchedule(seed=5).session_drop(op="recv_batch", at=1, times=1)
+    res = runner.run(tree="many-small", route=route, schedule=sched,
+                     strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("session_drop") == 1
+    # the dropped batch handed every file to the per-file path
+    assert res.task.stats.batch_fallbacks > 0
+
+
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_truncated_stream_detected_and_resent(runner, route):
+    sched = FaultSchedule(seed=6).truncate(after_bytes=100 * KB, at=1, times=1)
+    res = runner.run(tree="few-large", route=route, schedule=sched,
+                     strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("truncate") >= 1
+    assert res.task.stats.retries_by_kind.get("TruncatedStream", 0) >= 1
+    assert res.dest == res.expected  # holes were re-claimed byte-exact
+
+
+@pytest.mark.parametrize("route", CHAOS_ROUTES)
+def test_latency_spike_on_model_clock_only(runner, route):
+    """Injected latency must land on the model clock, never the wall
+    clock, when REPRO_TIME_SCALE=0 (pure accounting)."""
+    sched = FaultSchedule(seed=7).latency(op="read", delay=3.0, times=None)
+    v0 = runner.clock.virtual_elapsed
+    t0 = time.monotonic()
+    res = runner.run(tree="many-small", route=route, schedule=sched,
+                     strict=True)
+    wall = time.monotonic() - t0
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("latency") >= 1
+    assert runner.clock.virtual_elapsed - v0 >= 3.0 * sched.count("latency")
+    assert wall < 30.0  # seconds of *injected* model latency, instant wall
+
+
+# ---------------------------------------------------------------------------
+# reproducibility + exact schedule observability
+# ---------------------------------------------------------------------------
+def test_seeded_scenario_reproducible(runner):
+    """Same seed -> same fault sequence -> same TaskStats fingerprint."""
+    def build():
+        return (FaultSchedule(seed=17)
+                .transient(op="read", prob=0.03, times=None)
+                .latency(op="stat", delay=0.2, times=None)
+                .rate_limit(op="recv_batch", at=1, times=1, retry_after=0.1))
+
+    runs = [runner.run(tree="many-small", route="posix->cloud",
+                       schedule=build(), strict=True) for _ in range(2)]
+    assert runs[0].fingerprint() == runs[1].fingerprint()
+    assert runs[0].fingerprint()["events"]  # something actually fired
+
+
+def test_faults_retried_matches_schedule_exactly(runner):
+    """With a per-file route (batching off, one worker) every injected
+    transient maps 1:1 onto a counted retry."""
+    sched = FaultSchedule(seed=8).transient(op="recv", at=1, times=1)
+    res = runner.run(tree="many-small", route="posix->memory",
+                     schedule=sched,
+                     options=TransferOptions(startup_cost=0.0,
+                                             coalesce_threshold=0,
+                                             concurrency=1,
+                                             retry_backoff=0.01),
+                     strict=True)
+    n = res.task.stats.files_total
+    assert sched.count("transient") == n
+    assert res.task.stats.faults_retried == n
+    assert res.task.stats.retries_by_kind == {"FaultInjected": n}
+
+
+def test_truncation_with_transient_restat_not_silently_accepted(runner):
+    """Regression: when the post-truncation source re-stat itself hits a
+    transient fault, the short file must NOT be accepted as complete —
+    the transient propagates to the retry loop and the hole is re-sent."""
+    sched = (FaultSchedule(seed=13)
+             .truncate(after_bytes=100 * KB, op="recv", at=1, times=1)
+             .transient(op="stat", path="data/*", at=1, times=1))
+    res = runner.run(tree="few-large", route="posix->memory",
+                     schedule=sched, proxy="both", strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert res.dest == res.expected
+    assert res.task.stats.bytes_done == res.task.stats.bytes_total
+    assert res.task.stats.retries_by_kind.get("FaultInjected", 0) >= 1
+
+
+def test_batch_level_fault_counted_once(runner):
+    """Regression: one batch-level injection fails every batch-mate with
+    the same error object; faults_retried must count it once, keeping
+    the 1:1 observability contract with schedule.count()."""
+    sched = FaultSchedule(seed=14).rate_limit(op="recv_batch", at=1, times=1,
+                                              retry_after=0.1)
+    res = runner.run(tree="many-small", route="posix->memory",
+                     schedule=sched, strict=True)
+    assert res.task.status == res.task.SUCCEEDED
+    assert sched.count("rate_limit") == 1
+    assert res.task.stats.retries_by_kind.get("RateLimitError") == 1
+    assert res.task.stats.faults_retried == 1
+    assert res.task.stats.batch_fallbacks == res.task.stats.files_total
+
+
+def test_exhausted_retries_fail_cleanly(runner):
+    """A schedule that never relents produces a *clean* failure: every
+    failed file carries an error, accounting stays consistent."""
+    sched = FaultSchedule(seed=9).transient(op="recv*", times=None)
+    res = runner.run(tree="zero-byte", route="posix->memory",
+                     schedule=sched,
+                     options=TransferOptions(startup_cost=0.0, max_retries=2,
+                                             retry_backoff=0.01),
+                     strict=True)
+    assert res.task.status == res.task.FAILED
+    assert res.task.stats.files_failed == res.task.stats.files_total
+    assert all(fr.error for fr in res.task.files if not fr.ok)
+
+
+# ---------------------------------------------------------------------------
+# proxy transparency + legacy shim
+# ---------------------------------------------------------------------------
+def test_proxy_delegates_metadata_and_checksum(tmp_path):
+    clock = Clock(scale=0.0)
+    inner = PosixConnector(os.path.join(str(tmp_path), "root"))
+    proxy = FaultProxyConnector(inner, FaultSchedule(seed=0), clock=clock)
+    assert proxy.name == "chaos[posix]"
+    assert proxy.root == inner.root  # __getattr__ transparency
+    with proxy.start(None) as s:
+        proxy.command(s, "mkdir", "d")
+        with open(os.path.join(inner.root, "d", "x.bin"), "wb") as f:
+            f.write(b"hello world")
+        info = proxy.stat(s, "d/x.bin")
+        assert info.size == 11
+        assert [i.name for i in proxy.listdir(s, "d")] == ["d/x.bin"]
+        from repro.core import checksum_bytes
+        assert proxy.checksum(s, "d/x.bin", "sha256") == \
+            checksum_bytes(b"hello world", "sha256")
+
+
+def test_proxy_forwards_location_inference(tmp_path):
+    """Link selection must see through the proxy (placement/storage)."""
+    from repro.core.transfer import _location
+    clock = Clock(scale=0.0)
+    storage = make_cloud("s3", clock=clock)
+    conn = ObjectStoreConnector(storage, placement="cloud", clock=clock)
+    proxy = FaultProxyConnector(conn, FaultSchedule(seed=0))
+    assert _location(proxy) == _location(conn) == "cloud:s3"
+
+
+def test_cloud_fault_plan_shim_deprecated_but_works():
+    clock = Clock(scale=0.0)
+    storage = make_cloud("s3", clock=clock)
+    with pytest.warns(DeprecationWarning):
+        storage.fault_plan = lambda op, idx: op == "put"
+    from repro.connectors.cloud import lan_link
+    link = lan_link(clock)
+    with pytest.raises(FaultInjected):
+        storage.api_put("k", b"x", link)
+    storage.fault_plan = None  # clearing does not warn further
+    storage.api_put("k", b"x", link)
+    assert storage.blobs.get("k") == b"x"
+
+
+def test_cloud_storage_native_fault_schedule():
+    """CloudStorage speaks the shared FaultSchedule natively (the
+    fault_plan replacement), keyed by API op + object key."""
+    clock = Clock(scale=0.0)
+    sched = FaultSchedule(seed=11).rate_limit(op="put", path="bkt/hot*",
+                                              at=1, times=1, retry_after=0.5)
+    storage = make_cloud("s3", clock=clock, faults=sched)
+    from repro.connectors.cloud import lan_link
+    link = lan_link(clock)
+    with pytest.raises(RateLimitError) as ei:
+        storage.api_put("bkt/hot1", b"x", link)
+    assert ei.value.retry_after == 0.5
+    storage.api_put("bkt/cold", b"y", link)   # non-matching key unaffected
+    storage.api_put("bkt/hot1", b"x", link)   # window consumed: retry lands
+    assert storage.blobs.get("bkt/hot1") == b"x"
+    assert sched.count("rate_limit") == 1
+
+
+def test_chaos_transfer_through_cloud_storage_schedule(tmp_path):
+    """End to end: schedule attached to the *storage* (not a proxy) is
+    retried by the service and counted by kind."""
+    clock = Clock(scale=0.0)
+    creds = CredentialStore()
+    svc = TransferService(credential_store=creds,
+                          marker_root=os.path.join(str(tmp_path), "m"),
+                          clock=clock)
+    sched = FaultSchedule(seed=12).transient(op="put*", at=1, times=1)
+    storage = make_cloud("s3", clock=clock, faults=sched)
+    dst = ObjectStoreConnector(storage, placement="local", clock=clock)
+    creds.register(dst.name, Credential("s3-keypair", {}))
+    src = PosixConnector(os.path.join(str(tmp_path), "src"))
+    payload = os.urandom(64 * KB)
+    with open(os.path.join(src.root, "a.bin"), "wb") as f:
+        f.write(payload)
+    task = svc.submit(Endpoint(src, "a.bin"), Endpoint(dst, "o/a.bin", dst.name),
+                      TransferOptions(startup_cost=0.0, retry_backoff=0.01),
+                      sync=True)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    assert storage.blobs.get("o/a.bin") == payload
+    assert task.stats.retries_by_kind.get("FaultInjected", 0) >= 1

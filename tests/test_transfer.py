@@ -5,7 +5,7 @@ import threading
 
 import pytest
 
-from repro.core import (Credential, CredentialStore, Endpoint,
+from repro.core import (Credential, CredentialStore, Endpoint, FaultSchedule,
                         TransferOptions, TransferService, checksum_bytes)
 from repro.core.clock import Clock
 from repro.core.transfer import MarkerStore, _holes, _merge_ranges
@@ -144,17 +144,10 @@ def test_transient_fault_retry(tmp_path):
     clock = Clock(scale=0.0)
     svc, creds = make_service(tmp_path, clock)
 
-    fails = {"n": 0}
-
-    def fault_plan(op, idx):
-        if op == "put_part" and fails["n"] < 3:
-            fails["n"] += 1
-            return True
-        return False
-
-    drive = make_cloud("drive", clock=clock, quota_rate=10_000,
+    faults = FaultSchedule(seed=0).transient(op="put_part", at=1, times=3,
+                                            scope="global")
+    drive = make_cloud("drive", clock=clock, faults=faults, quota_rate=10_000,
                        quota_burst=100_000, consistency_delay=0.0)
-    drive.fault_plan = fault_plan
     dst_conn = ObjectStoreConnector(drive, placement="local", clock=clock)
     creds.register("ep-drive", Credential("oauth2-token", {"token": "t"}))
     payload = os.urandom(128 * 1024)
@@ -164,14 +157,17 @@ def test_transient_fault_retry(tmp_path):
                       TransferOptions(retry_backoff=0.001), sync=True)
     assert task.status == task.SUCCEEDED, task.events
     assert task.stats.faults_retried == 3
+    assert task.stats.retries_by_kind == {"FaultInjected": 3}
+    assert faults.count("transient") == 3
     assert drive.blobs.get("folder/w.bin") == payload
 
 
 def test_retries_exhausted_marks_failed(tmp_path):
     clock = Clock(scale=0.0)
     svc, creds = make_service(tmp_path, clock)
-    s3 = make_cloud("s3", clock=clock)
-    s3.fault_plan = lambda op, idx: op == "put_part"
+    s3 = make_cloud("s3", clock=clock,
+                    faults=FaultSchedule().transient(op="put_part",
+                                                     times=None))
     dst_conn = ObjectStoreConnector(s3, placement="local", clock=clock)
     creds.register("ep", Credential("s3-keypair", {}))
     src = seeded_posix(tmp_path, {"f.bin": b"x" * 1024})
