@@ -17,6 +17,7 @@ import json
 import os
 import sys
 import time
+import traceback
 
 
 def _write_perfile_json(models: dict, path: str = "BENCH_perfile.json") -> None:
@@ -56,8 +57,8 @@ def main() -> None:
 
     # import AFTER the env flag so common.py picks it up
     from . import (bench_chaos, bench_ckpt, bench_data, bench_integrity,
-                   bench_intercloud, bench_kernels, bench_perfile,
-                   bench_startup, bench_throughput)
+                   bench_intercloud, bench_kernels, bench_manager,
+                   bench_perfile, bench_startup, bench_throughput)
 
     suites = {
         "perfile": bench_perfile.run,        # Figs 6-11 + Table 1
@@ -66,19 +67,35 @@ def main() -> None:
         "intercloud": bench_intercloud.run,  # Figs 17-18
         "integrity": bench_integrity.run,    # Figs 19-21
         "chaos": bench_chaos.run,            # goodput vs fault rate
+        "manager": bench_manager.run,        # fleet goodput + fairness
         "ckpt": bench_ckpt.run,              # framework: §8 coalescing
         "data": bench_data.run,              # framework: ingest
         "kernels": bench_kernels.run,        # framework: pallas kernels
     }
     wanted = (args.only.split(",") if args.only else list(suites))
+    unknown = [name for name in wanted if name not in suites]
+    if unknown:
+        print(f"# unknown suite(s): {','.join(unknown)}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     t0 = time.monotonic()
+    failed: list[str] = []
     for name in wanted:
         print(f"# --- {name} ---", file=sys.stderr)
-        result = suites[name]()
+        try:
+            result = suites[name]()
+        except Exception:
+            # a broken benchmark must fail the scripted run (CI gates on
+            # the exit code), not scroll past as a stack trace
+            traceback.print_exc()
+            failed.append(name)
+            continue
         if name == "perfile" and result:
             _write_perfile_json(result)
     print(f"# total wall: {time.monotonic() - t0:.1f}s", file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Run the exact CI matrix locally (.github/workflows/ci.yml) and exit
+nonzero on any failure, so a builder can run the same gate before
+pushing:
+
+    python scripts/ci_check.py            # full matrix
+    python scripts/ci_check.py --fast     # skip the chaos/slow lane
+    python scripts/ci_check.py --only tier1,bench
+
+Lanes:
+  compile  byte-compile src/benchmarks/examples/scripts/tests
+  tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow"
+  chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
+  bench    PYTHONPATH=src python -m benchmarks.run --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LANES: dict[str, list[str]] = {
+    "compile": [sys.executable, "-m", "compileall", "-q",
+                "src", "benchmarks", "examples", "scripts", "tests"],
+    "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
+              "-m", "not chaos and not slow"],
+    "chaos": [sys.executable, "-m", "pytest", "-q",
+              "-m", "chaos or slow"],
+    "bench": [sys.executable, "-m", "benchmarks.run", "--quick"],
+}
+
+
+def run_lane(name: str, cmd: list[str]) -> bool:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.setdefault("REPRO_TIME_SCALE", "0.0")
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    print(f"=== {name}: {' '.join(cmd)}", flush=True)
+    t0 = time.monotonic()
+    proc = subprocess.run(cmd, cwd=REPO, env=env)
+    dt = time.monotonic() - t0
+    status = "ok" if proc.returncode == 0 else f"FAILED rc={proc.returncode}"
+    print(f"=== {name}: {status} ({dt:.0f}s)", flush=True)
+    return proc.returncode == 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="mirror the CI matrix locally; nonzero exit on failure")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the chaos/slow lane")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated lane subset: "
+                         + ",".join(LANES))
+    args = ap.parse_args()
+    wanted = list(LANES)
+    if args.only:
+        wanted = args.only.split(",")
+        unknown = [w for w in wanted if w not in LANES]
+        if unknown:
+            print(f"unknown lane(s): {','.join(unknown)}", file=sys.stderr)
+            return 2
+    if args.fast and "chaos" in wanted:
+        wanted.remove("chaos")
+    failed = [name for name in wanted if not run_lane(name, LANES[name])]
+    if failed:
+        print(f"\nCI check FAILED: {', '.join(failed)}")
+        return 1
+    print(f"\nCI check passed: {', '.join(wanted)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

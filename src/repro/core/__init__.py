@@ -1,7 +1,8 @@
 # The paper's primary contribution: the Connector storage abstraction
-# (connector.py), the managed third-party transfer service (transfer.py),
-# end-to-end integrity checking (integrity.py), and the performance-
-# model-based evaluation method (perfmodel.py).
+# (connector.py), the managed third-party transfer service (transfer.py +
+# the multi-task control plane in manager.py), end-to-end integrity
+# checking (integrity.py), and the performance-model-based evaluation
+# method (perfmodel.py).
 
 from .connector import (AppChannel, ByteRange, Connector, Credential,
                         Session, StatInfo, iter_files)
@@ -9,8 +10,9 @@ from .errors import (AuthError, ConnectorError, FaultInjected, IntegrityError,
                      NotFound, PermanentError, RateLimitError, TransientError,
                      TruncatedStream)
 from .faults import FaultEvent, FaultRule, FaultSchedule
-from .transfer import (CredentialStore, Endpoint, TransferOptions,
-                       TransferService, TransferTask)
+from .transfer import (CredentialStore, Endpoint, TaskInterrupted,
+                       TransferOptions, TransferService, TransferTask)
+from .manager import RouteCandidate, SessionPool, TransferManager
 from .perfmodel import (Advisor, PerfModel, Route, fit_linear, fit_perf_model,
                         fit_startup_cost, pearson)
 from .integrity import checksum_bytes, hasher
@@ -23,8 +25,9 @@ __all__ = [
     "NotFound", "PermanentError", "RateLimitError", "TransientError",
     "TruncatedStream",
     "FaultEvent", "FaultRule", "FaultSchedule",
-    "CredentialStore", "Endpoint", "TransferOptions", "TransferService",
-    "TransferTask",
+    "CredentialStore", "Endpoint", "TaskInterrupted", "TransferOptions",
+    "TransferService", "TransferTask",
+    "RouteCandidate", "SessionPool", "TransferManager",
     "Advisor", "PerfModel", "Route", "fit_linear", "fit_perf_model",
     "fit_startup_cost", "pearson",
     "checksum_bytes", "hasher",

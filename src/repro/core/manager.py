@@ -1,0 +1,586 @@
+"""Multi-task control plane for the managed transfer service.
+
+The paper's contribution is not the Connector alone but the *managed*
+third-party service built on it — an orchestrator that initiates
+source->destination transfers without sitting in the data path and runs
+many tasks at once for performance, error handling, and integrity
+(paper §2.1-§2.2).  :class:`TransferManager` is that control plane:
+
+* a priority/FIFO submission queue with a global worker budget and
+  per-endpoint concurrency caps, so a fleet of tasks cannot overrun a
+  single storage endpoint;
+* full task lifecycle — ``submit`` / ``pause`` / ``resume`` / ``cancel``
+  / ``wait`` — where a paused task is checkpointed through the
+  service's :class:`~repro.core.transfer.MarkerStore` and a resume
+  re-opens only the unfinished holes;
+* fair scheduling across *tenants* (credential identities from
+  :class:`~repro.core.transfer.CredentialStore`): tenants take turns in
+  round-robin order, so one user's 10k-file task cannot starve others;
+* session sharing: one live connector :class:`Session` per endpoint,
+  refcounted across every task that touches it (a
+  :class:`SessionPool`), instead of a start/destroy pair per task;
+* model-driven routing: a submission naming multiple candidate routes
+  is placed by :meth:`~repro.core.perfmodel.Advisor.best`, the batch
+  policy sized by :meth:`~repro.core.perfmodel.Advisor.coalesce_threshold`,
+  and the prediction vs. the model-clock actual recorded in
+  :class:`~repro.core.transfer.TaskStats` so the per-route perf model
+  can be refit online from live traffic (:meth:`TransferManager.refit_route`).
+
+:class:`~repro.core.transfer.TransferService` keeps the per-task engine
+(expansion, pipes, batches, retries, markers); a bare ``service.submit``
+is just the degenerate case of this manager with default knobs.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+
+from .connector import Session, iter_files
+from .perfmodel import Advisor, Route, fit_perf_model
+from .transfer import (Endpoint, TransferOptions, TransferService,
+                       TransferTask)
+
+
+# --------------------------------------------------------------------------
+# session sharing across tasks
+# --------------------------------------------------------------------------
+class SessionPool:
+    """One live connector session per endpoint, shared by every task the
+    manager runs against it.
+
+    The per-task engine historically paid ``start``/``destroy`` per
+    task; at fleet scale that is a fresh activation (and a fresh batch
+    worker pool) per task per endpoint.  The pool refcounts instead:
+    ``acquire`` starts a session on first use, every later task reuses
+    it, and sessions stay warm between tasks until :meth:`close_all`
+    (manager shutdown) destroys them.
+    """
+
+    def __init__(self, creds):
+        self._creds = creds
+        self._lock = threading.Lock()
+        #: key -> [session, refcount]
+        self._sessions: dict[tuple, list] = {}
+        self._draining = False
+
+    @staticmethod
+    def _key(ep: Endpoint) -> tuple:
+        return (id(ep.connector), ep.resolved_id())
+
+    def acquire(self, ep: Endpoint) -> Session:
+        with self._lock:
+            entry = self._sessions.get(self._key(ep))
+            if entry is None or entry[0].closed:
+                session = ep.connector.start(
+                    self._creds.lookup(ep.resolved_id()))
+                entry = self._sessions[self._key(ep)] = [session, 0]
+            entry[1] += 1
+            return entry[0]
+
+    def release(self, ep: Endpoint) -> None:
+        victim = None
+        with self._lock:
+            key = self._key(ep)
+            entry = self._sessions.get(key)
+            if entry is not None and entry[1] > 0:
+                entry[1] -= 1
+                if self._draining and entry[1] == 0:
+                    # close_all ran while this session was in use: the
+                    # last task off it completes the teardown
+                    victim = self._sessions.pop(key)[0]
+        if victim is not None and not victim.closed:
+            victim.connector.destroy(victim)
+
+    @property
+    def live_sessions(self) -> int:
+        with self._lock:
+            return sum(1 for s, _ in self._sessions.values() if not s.closed)
+
+    def close_all(self) -> None:
+        """Destroy idle sessions now; in-use ones (refcount > 0) are
+        destroyed by their final ``release`` — never under a live
+        transfer, which would turn a shutdown into spurious
+        SessionClosed failures mid-stream."""
+        with self._lock:
+            self._draining = True
+            victims = [key for key, entry in self._sessions.items()
+                       if entry[1] <= 0]
+            entries = [self._sessions.pop(key) for key in victims]
+        for session, _ in entries:
+            if not session.closed:
+                session.connector.destroy(session)
+
+
+# --------------------------------------------------------------------------
+# submissions
+# --------------------------------------------------------------------------
+@dataclass
+class RouteCandidate:
+    """One route a submission may take; ``name`` matches an Advisor
+    :class:`~repro.core.perfmodel.Route` so the manager can predict."""
+
+    name: str
+    src: Endpoint
+    dst: Endpoint
+
+
+@dataclass
+class _Submission:
+    task: TransferTask
+    src: Endpoint
+    dst: Endpoint
+    options: TransferOptions
+    tenant: str
+    priority: int
+    seq: int
+    route_name: str = ""
+    n_files_hint: int = 0
+    nbytes_hint: int = 0
+    #: a resume raced an in-flight pause: when the run loop drains with
+    #: status PAUSED, re-queue instead of filing into the paused set
+    resume_pending: bool = False
+
+    @property
+    def ep_ids(self) -> set[str]:
+        return {self.src.resolved_id(), self.dst.resolved_id()}
+
+
+@dataclass
+class ManagerMetrics:
+    """Control-plane accounting, for caps/fairness assertions."""
+
+    submitted: int = 0
+    completed: int = 0
+    cancelled: int = 0
+    pauses: int = 0
+    resumes: int = 0
+    peak_active: int = 0
+    #: high-water mark of concurrently-active tasks touching an endpoint
+    peak_by_endpoint: dict = field(default_factory=dict)
+    #: how many dispatches each tenant has received (fairness evidence)
+    dispatches_by_tenant: dict = field(default_factory=dict)
+    #: (tenant, task_id) in dispatch order — round-robin observability
+    dispatch_log: list = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# the manager
+# --------------------------------------------------------------------------
+class TransferManager:
+    """Owns a fleet of :class:`TransferTask`s over one
+    :class:`TransferService`.
+
+    Scheduling model: each tenant has a priority heap of submissions;
+    tenants take strict round-robin turns, and within a turn the
+    tenant's best eligible entry (lowest ``priority``, then FIFO) runs.
+    An entry is eligible when the global worker budget has a free slot
+    and neither of its endpoints is at ``per_endpoint_cap`` active
+    tasks.  Dispatch is event-driven — submissions, completions, and
+    resumes pump the scheduler; there is no polling thread.
+    """
+
+    def __init__(self, service: TransferService | None = None,
+                 advisor: Advisor | None = None, max_workers: int = 4,
+                 per_endpoint_cap: int | None = 2,
+                 share_sessions: bool = True, **service_kw):
+        self.service = service or TransferService(**service_kw)
+        self.advisor = advisor
+        self.max_workers = max(1, max_workers)
+        self.per_endpoint_cap = per_endpoint_cap
+        self.sessions = SessionPool(self.service.creds) if share_sessions \
+            else None
+        self.metrics = ManagerMetrics()
+        self._lock = threading.RLock()
+        self._queues: dict[str, list] = {}   # tenant -> [(prio, seq, sub)]
+        self._rr: list[str] = []             # tenant round-robin order
+        self._queued: dict[str, _Submission] = {}
+        self._running: dict[str, _Submission] = {}
+        self._paused: dict[str, _Submission] = {}
+        self._all: dict[str, _Submission] = {}
+        self._active_eps: dict[str, int] = {}
+        self._seq = itertools.count()
+        #: per-route (n_files, nbytes, model_seconds) from completed
+        #: tasks — the online-refit observation log
+        self._history: dict[str, list[tuple[int, int, float]]] = {}
+        self._shutdown = False
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, src: Endpoint | None = None, dst: Endpoint | None = None,
+               options: TransferOptions | None = None, *,
+               task_id: str | None = None, tenant: str | None = None,
+               priority: int = 0,
+               candidates: list[RouteCandidate] | None = None,
+               n_files: int = 0, nbytes: int = 0,
+               sync: bool = False) -> TransferTask:
+        """Enqueue one transfer.  Either a concrete ``(src, dst)`` pair
+        or ``candidates`` (Advisor-routed) must be given.  ``tenant``
+        defaults to the credential identity behind the source endpoint;
+        lower ``priority`` runs earlier within a tenant's turn.
+        ``n_files``/``nbytes`` are workload hints for route prediction
+        (estimated by expanding the source when omitted)."""
+        if candidates:
+            src, dst, options, route_name, predicted = self._choose_route(
+                candidates, options, n_files, nbytes)
+        elif src is None or dst is None:
+            raise ValueError("submit needs src+dst or candidates")
+        else:
+            route_name, predicted = "", 0.0
+        options = options or TransferOptions()
+        task = self.service.make_task(src, dst, task_id)
+        if tenant is None:
+            tenant = self.service.creds.identity(src.resolved_id())
+        task.stats.tenant = tenant
+        task.stats.route = route_name
+        task.stats.predicted_seconds = predicted
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("manager is shut down")
+            sub = _Submission(task, src, dst, options, tenant, priority,
+                              next(self._seq), route_name=route_name,
+                              n_files_hint=n_files, nbytes_hint=nbytes)
+            self._enqueue_locked(sub)
+            self.metrics.submitted += 1
+        self._pump()
+        if sync:
+            task.wait()
+        return task
+
+    def _enqueue_locked(self, sub: _Submission) -> None:
+        heap = self._queues.setdefault(sub.tenant, [])
+        heapq.heappush(heap, (sub.priority, sub.seq, sub))
+        if sub.tenant not in self._rr:
+            self._rr.append(sub.tenant)
+        self._queued[sub.task.task_id] = sub
+        self._all[sub.task.task_id] = sub
+
+    # ---- advisor routing -------------------------------------------------
+    def _choose_route(self, candidates, options, n_files, nbytes):
+        """Pick the candidate route the fitted models predict fastest.
+        Each candidate is ranked against its OWN source tree (replicas
+        may differ in shape — one side may already be coalesced into few
+        large objects); concurrency and the coalesce threshold are then
+        sized from the winner."""
+        if self.advisor is None:
+            raise ValueError("candidate routing needs an advisor")
+        estimates: dict[tuple, tuple[int, int]] = {}  # shared-src cache
+        best = None
+        for cand in candidates:
+            for route in self.advisor.routes:
+                if route.name == cand.name:
+                    break
+            else:
+                raise ValueError(f"no advisor route named {cand.name!r}")
+            if n_files:
+                workload = (n_files, nbytes)
+            else:
+                key = (id(cand.src.connector), cand.src.path)
+                if key not in estimates:
+                    estimates[key] = self._estimate_workload(cand.src)
+                workload = estimates[key]
+            _, cc, predicted = Advisor([route]).best(*workload)
+            if best is None or predicted < best[3]:
+                best = (cand, route, cc, predicted)
+        cand, route, cc, predicted = best
+        # copy before tuning: the caller may share one TransferOptions
+        # across submissions, and the advisor's knobs are per-task
+        options = replace(options) if options is not None \
+            else TransferOptions()
+        options.concurrency = max(1, min(cc, route.max_concurrency))
+        options.coalesce_threshold = self.advisor.coalesce_threshold(route)
+        return cand.src, cand.dst, options, route.name, predicted
+
+    def _estimate_workload(self, src: Endpoint) -> tuple[int, int]:
+        """(n_files, nbytes) by expanding the source prefix — the same
+        walk ``_execute`` will do, done early so the Advisor can place
+        the task before it runs."""
+        release = None
+        if self.sessions is not None:
+            session = self.sessions.acquire(src)
+            release = lambda: self.sessions.release(src)
+        else:
+            session = src.connector.start(
+                self.service.creds.lookup(src.resolved_id()))
+            release = lambda: src.connector.destroy(session)
+        try:
+            info = src.connector.stat(session, src.path)
+            if not info.is_dir:
+                return 1, info.size
+            n = total = 0
+            for fi in iter_files(src.connector, session, src.path):
+                n += 1
+                total += fi.size
+            return max(n, 1), total
+        finally:
+            release()
+
+    # ---- scheduling ------------------------------------------------------
+    def _eligible_locked(self, sub: _Submission) -> bool:
+        if self.per_endpoint_cap is None:
+            return True
+        return all(self._active_eps.get(ep_id, 0) < self.per_endpoint_cap
+                   for ep_id in sub.ep_ids)
+
+    def _pick_locked(self) -> _Submission | None:
+        """Next runnable submission: tenants rotate round-robin; within
+        a tenant, lowest (priority, seq) whose endpoints are under cap."""
+        if len(self._running) >= self.max_workers:
+            return None
+        for _ in range(len(self._rr)):
+            tenant = self._rr.pop(0)
+            self._rr.append(tenant)
+            heap = self._queues.get(tenant)
+            if not heap:
+                continue
+            for item in sorted(heap):
+                sub = item[2]
+                if self._eligible_locked(sub):
+                    heap.remove(item)
+                    heapq.heapify(heap)
+                    return sub
+        return None
+
+    def _activate_locked(self, sub: _Submission) -> None:
+        tid = sub.task.task_id
+        self._queued.pop(tid, None)
+        # claim idleness here, not in the worker thread: a pause landing
+        # between dispatch and the run loop's own clear must not let
+        # wait_idle() return before the run loop has reacted
+        sub.task._idle.clear()
+        self._running[tid] = sub
+        for ep_id in sub.ep_ids:
+            n = self._active_eps.get(ep_id, 0) + 1
+            self._active_eps[ep_id] = n
+            peak = self.metrics.peak_by_endpoint
+            peak[ep_id] = max(peak.get(ep_id, 0), n)
+        self.metrics.peak_active = max(self.metrics.peak_active,
+                                       len(self._running))
+        by_tenant = self.metrics.dispatches_by_tenant
+        by_tenant[sub.tenant] = by_tenant.get(sub.tenant, 0) + 1
+        self.metrics.dispatch_log.append((sub.tenant, tid))
+
+    def _pump(self) -> None:
+        """Dispatch every runnable submission to a worker thread."""
+        with self._lock:
+            if self._shutdown:
+                return
+            while True:
+                sub = self._pick_locked()
+                if sub is None:
+                    return
+                self._activate_locked(sub)
+                threading.Thread(target=self._run_one, args=(sub,),
+                                 daemon=True).start()
+
+    @contextmanager
+    def _pooled_sessions(self, src: Endpoint, dst: Endpoint):
+        s_src = self.sessions.acquire(src)
+        try:
+            s_dst = self.sessions.acquire(dst)
+            try:
+                yield s_src, s_dst
+            finally:
+                self.sessions.release(dst)
+        finally:
+            self.sessions.release(src)
+
+    def _run_one(self, sub: _Submission) -> None:
+        clock = self.service.clock
+        v0 = clock.virtual_elapsed
+        scope = self._pooled_sessions if self.sessions is not None else None
+        try:
+            self.service._run(sub.task, sub.src, sub.dst, sub.options,
+                              session_scope=scope)
+        finally:
+            self._on_done(sub, clock.virtual_elapsed - v0)
+
+    def _on_done(self, sub: _Submission, model_seconds: float) -> None:
+        task = sub.task
+        with self._lock:
+            tid = task.task_id
+            self._running.pop(tid, None)
+            for ep_id in sub.ep_ids:
+                n = self._active_eps.get(ep_id, 0) - 1
+                if n > 0:
+                    self._active_eps[ep_id] = n
+                else:
+                    self._active_eps.pop(ep_id, None)
+            task.stats.actual_model_seconds += model_seconds
+            if task.status == TransferTask.PAUSED:
+                self.metrics.pauses += 1
+                if sub.resume_pending:
+                    # a resume raced the drain: straight back to the queue
+                    sub.resume_pending = False
+                    task._pause_req.clear()
+                    task.status = TransferTask.PENDING
+                    task.stats.resumes += 1
+                    self.metrics.resumes += 1
+                    sub.seq = next(self._seq)
+                    self._enqueue_locked(sub)
+                else:
+                    self._paused[tid] = sub
+            elif task.status == TransferTask.CANCELLED:
+                self.metrics.cancelled += 1
+            else:
+                self.metrics.completed += 1
+                if task.status == TransferTask.SUCCEEDED and sub.route_name:
+                    # caveat: the virtual clock is shared, so concurrent
+                    # tasks inflate each other's reading; observations
+                    # are exact in the one-slot / sync setting the
+                    # refit loop uses
+                    self._history.setdefault(sub.route_name, []).append(
+                        (task.stats.files_total, task.stats.bytes_total,
+                         task.stats.actual_model_seconds))
+        self._pump()
+
+    # ---- lifecycle -------------------------------------------------------
+    def get(self, task_id: str) -> TransferTask:
+        return self.service.get(task_id)
+
+    def pause(self, task_id: str) -> bool:
+        """Request a pause.  A queued task pauses immediately; a running
+        task checkpoints its in-flight files through the MarkerStore and
+        goes PAUSED once its run loop drains (``task.wait_idle()``)."""
+        with self._lock:
+            sub = self._queued.pop(task_id, None)
+            if sub is not None:
+                self._remove_from_queue_locked(sub)
+                sub.task.status = TransferTask.PAUSED
+                self._paused[task_id] = sub
+                self.metrics.pauses += 1
+                return True
+            sub = self._running.get(task_id)
+            if sub is not None and not sub.task._done.is_set():
+                sub.task.request_pause()
+                return True
+        return False
+
+    def resume(self, task_id: str) -> bool:
+        """Re-queue a paused task; restart markers re-open only the
+        holes, so completed ranges are never re-sent."""
+        with self._lock:
+            sub = self._paused.pop(task_id, None)
+            if sub is None:
+                # the pause may still be draining its run loop: cancel
+                # the request and let _on_done re-queue on drain
+                run_sub = self._running.get(task_id)
+                if run_sub is not None \
+                        and run_sub.task._pause_req.is_set() \
+                        and not run_sub.task._done.is_set():
+                    run_sub.resume_pending = True
+                    return True
+                return False
+            task = sub.task
+            task._pause_req.clear()
+            task.status = TransferTask.PENDING
+            task.stats.resumes += 1
+            self.metrics.resumes += 1
+            sub.seq = next(self._seq)  # back of the tenant's FIFO
+            self._enqueue_locked(sub)
+        self._pump()
+        return True
+
+    def cancel(self, task_id: str) -> bool:
+        with self._lock:
+            sub = self._queued.pop(task_id, None) \
+                or self._paused.pop(task_id, None)
+            if sub is not None:
+                self._remove_from_queue_locked(sub)
+                sub.task.request_cancel()
+                self.service.markers.clear(task_id)
+                self.metrics.cancelled += 1
+                sub.task._finish(TransferTask.CANCELLED)
+                return True
+            sub = self._running.get(task_id)
+            if sub is not None:
+                sub.task.request_cancel()
+                return True
+        return False
+
+    def _remove_from_queue_locked(self, sub: _Submission) -> None:
+        heap = self._queues.get(sub.tenant)
+        if heap:
+            for item in heap:
+                if item[2] is sub:
+                    heap.remove(item)
+                    heapq.heapify(heap)
+                    break
+
+    def wait(self, task_id: str, timeout: float | None = None) -> bool:
+        return self.service.get(task_id).wait(timeout)
+
+    #: re-snapshot cadence for wait_all — a task can leave the pending
+    #: set without setting _done (pause), so no single _done wait may
+    #: consume the whole timeout budget
+    WAIT_SLICE = 0.02
+
+    def wait_all(self, timeout: float | None = None) -> bool:
+        """Wait until every non-paused task has finished."""
+        import time as _time
+        deadline = None if timeout is None else _time.monotonic() + timeout
+        while True:
+            with self._lock:
+                pending = [s.task for s in self._all.values()
+                           if s.task.task_id not in self._paused
+                           and not s.task._done.is_set()]
+            if not pending:
+                return True
+            remaining = None if deadline is None \
+                else deadline - _time.monotonic()
+            if remaining is not None and remaining <= 0:
+                return False
+            step = self.WAIT_SLICE if remaining is None \
+                else min(self.WAIT_SLICE, remaining)
+            pending[0].wait(step)
+
+    def shutdown(self, wait: bool = True,
+                 timeout: float | None = None) -> None:
+        """Stop dispatching, optionally drain running tasks, and close
+        the shared sessions."""
+        if wait:
+            self.wait_all(timeout)
+        with self._lock:
+            self._shutdown = True
+        if self.sessions is not None:
+            self.sessions.close_all()
+
+    # ---- observability / online refit -----------------------------------
+    def counts(self) -> dict:
+        with self._lock:
+            return {"queued": len(self._queued),
+                    "running": len(self._running),
+                    "paused": len(self._paused),
+                    "active_by_endpoint": dict(self._active_eps)}
+
+    def observations(self, route_name: str) -> list[tuple[int, int, float]]:
+        with self._lock:
+            return list(self._history.get(route_name, []))
+
+    def refit_route(self, route_name: str, min_points: int = 3):
+        """Refit one advisor route from recorded (n_files, seconds)
+        observations — the paper's §5 regression, rerun on live traffic
+        instead of a benchmark sweep.  Returns the new
+        :class:`~repro.core.perfmodel.PerfModel`, or ``None`` when there
+        are too few (or degenerate) points."""
+        if self.advisor is None:
+            return None
+        pts = self.observations(route_name)
+        if len(pts) < max(2, min_points):
+            return None
+        route = next((r for r in self.advisor.routes
+                      if r.name == route_name), None)
+        if route is None:
+            return None
+        n_files = [p[0] for p in pts]
+        seconds = [p[2] for p in pts]
+        bytes_mean = int(sum(p[1] for p in pts) / len(pts))
+        try:
+            model = fit_perf_model(route_name, n_files, seconds, bytes_mean,
+                                   s0=route.model.s0)
+        except ValueError:  # degenerate xs (all same file count)
+            return None
+        route.model = model
+        return model

@@ -178,8 +178,10 @@ class Advisor:
 
 
 def _cc_ladder(max_cc: int) -> list[int]:
+    # cc=1 is always a candidate: a route advertising max_concurrency<1
+    # must still be rankable, or Advisor.best would silently skip it
     out, cc = [], 1
-    while cc <= max_cc:
+    while cc <= max(1, max_cc):
         out.append(cc)
         cc *= 2
     return out

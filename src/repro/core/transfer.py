@@ -46,6 +46,7 @@ import os
 import threading
 import time
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 from .clock import Clock, DEFAULT_CLOCK, Link, loopback
@@ -56,6 +57,13 @@ from .errors import (IntegrityError, PermanentError, TransientError,
 from .integrity import hasher
 
 MB = 1024 * 1024
+
+
+class TaskInterrupted(Exception):
+    """Control-flow signal: a pause/cancel request reached an in-flight
+    file.  Never counts as a fault or a failure — the interrupted file
+    stays pending, its partial ranges checkpointed through the
+    :class:`MarkerStore` so a resume re-opens only the holes."""
 
 
 # --------------------------------------------------------------------------
@@ -75,6 +83,18 @@ class CredentialStore:
 
     def lookup(self, endpoint_id: str) -> Credential | None:
         return self._creds.get(endpoint_id)
+
+    def identity(self, endpoint_id: str) -> str:
+        """Tenant identity behind an endpoint's credential — the unit of
+        fair scheduling in the manager.  Credentials may carry an
+        explicit ``identity``/``user`` field; otherwise the scheme is the
+        best available grouping, and unregistered endpoints share one
+        anonymous tenant."""
+        cred = self._creds.get(endpoint_id)
+        if cred is None:
+            return "anonymous"
+        return cred.data.get("identity") or cred.data.get("user") \
+            or cred.scheme
 
 
 @dataclass(frozen=True)
@@ -141,12 +161,22 @@ class TaskStats:
     retries_by_kind: dict = field(default_factory=dict)
     wall_seconds: float = 0.0
     effective_concurrency: float = 0.0
+    #: control-plane provenance (filled by the TransferManager)
+    tenant: str = ""
+    route: str = ""
+    #: Advisor prediction vs. what the model clock actually charged, so
+    #: the per-route perf model can be refit online from live traffic
+    predicted_seconds: float = 0.0
+    actual_model_seconds: float = 0.0
+    #: how many times the task was paused and resumed
+    resumes: int = 0
 
 
 class TransferTask:
     """Control-channel handle the client polls (never in the data path)."""
 
     PENDING, ACTIVE, SUCCEEDED, FAILED = "PENDING", "ACTIVE", "SUCCEEDED", "FAILED"
+    PAUSED, CANCELLED = "PAUSED", "CANCELLED"
 
     RATE_WINDOW = 4096  # ring-buffer capacity for throughput samples
 
@@ -158,9 +188,40 @@ class TransferTask:
         self.events: list[tuple[float, str]] = []
         self._done = threading.Event()
         self._lock = threading.Lock()
+        # control plane: pause/cancel requests checked by the run loop
+        # between work items and by in-flight pipes between block claims
+        self._pause_req = threading.Event()
+        self._cancel_req = threading.Event()
+        # set whenever no run loop is executing this task (a paused task
+        # is idle but not done; the manager waits on this to re-dispatch)
+        self._idle = threading.Event()
+        self._idle.set()
         # bounded ring buffer: append is O(1), old samples fall off
         self._rate_samples: deque[tuple[float, int]] = deque(
             maxlen=self.RATE_WINDOW)
+
+    # ---- control plane -------------------------------------------------
+    def request_pause(self) -> None:
+        self._pause_req.set()
+
+    def request_cancel(self) -> None:
+        self._cancel_req.set()
+
+    def interrupt_exc(self) -> TaskInterrupted | None:
+        """Non-None when a pause/cancel request is outstanding; handed to
+        in-flight pipes so they stop claiming new block ranges."""
+        if self._cancel_req.is_set():
+            return TaskInterrupted("cancelled")
+        if self._pause_req.is_set():
+            return TaskInterrupted("paused")
+        return None
+
+    def interrupted(self) -> bool:
+        return self._pause_req.is_set() or self._cancel_req.is_set()
+
+    def wait_idle(self, timeout: float | None = None) -> bool:
+        """True once no run loop is executing the task (done OR paused)."""
+        return self._idle.wait(timeout)
 
     def log(self, msg: str) -> None:
         with self._lock:
@@ -202,6 +263,7 @@ class TransferTask:
 
     def _finish(self, status: str) -> None:
         self.status = status
+        self._idle.set()
         self._done.set()
 
 
@@ -378,11 +440,14 @@ class _FilePipe:
 
     def __init__(self, size: int, holes: list[ByteRange], link: Link,
                  options: TransferOptions, on_written, checksum_alg: str | None,
-                 single_consumer: bool = False):
+                 single_consumer: bool = False, abort=None):
         self.size = size
         self.link = link
         self.opt = options
         self.on_written = on_written
+        #: optional () -> Exception | None checked between block claims;
+        #: a pause/cancel request stops the stream at block granularity
+        self.abort = abort
         self._claims: deque[ByteRange] = deque(holes)
         self._ready: dict[int, bytes] = {}
         self._ready_order: deque[int] = deque()
@@ -404,6 +469,16 @@ class _FilePipe:
         with self._cv:
             if self._error is not None:
                 return None
+            if self.abort is not None and self._claims:
+                err = self.abort()
+                if err is not None:
+                    # stop handing out ranges; already-written ranges
+                    # stay durable and marker-checkpointed, so a resume
+                    # re-opens only the holes
+                    self._error = err
+                    self._send_done = True
+                    self._cv.notify_all()
+                    return None
             while self._claims:
                 rng = self._claims[0]
                 take = min(self.opt.blocksize, rng.length)
@@ -592,7 +667,16 @@ def _infer_location(connector: Connector) -> str:
 
 
 class TransferService:
-    """The hosted managed-transfer service (Globus role)."""
+    """The per-task transfer engine (expansion, pipes, retries, markers).
+
+    Queueing and worker ownership live one layer up in
+    :class:`~repro.core.manager.TransferManager`; a bare ``submit`` here
+    is just the degenerate case — it lazily creates a private manager and
+    hands the task over, so a single task and a 10k-task fleet run the
+    same code path."""
+
+    #: worker budget of the implicit manager behind bare ``submit`` calls
+    DEFAULT_WORKERS = 8
 
     def __init__(self, credential_store: CredentialStore | None = None,
                  marker_root: str | None = None, clock: Clock | None = None,
@@ -603,6 +687,8 @@ class TransferService:
         self.clock = clock or DEFAULT_CLOCK
         self._link_factory = data_link_factory or self._default_link
         self._tasks: dict[str, TransferTask] = {}
+        self._manager = None
+        self._manager_lock = threading.Lock()
 
     # DTN<->DTN data channel selection (Figs. 4/5 topology)
     def _default_link(self, src: Connector, dst: Connector) -> Link:
@@ -610,6 +696,34 @@ class TransferService:
             return loopback(self.clock)
         from ..connectors.cloud import wan_link  # local import, no cycle
         return wan_link(self.clock)
+
+    def default_manager(self):
+        """The implicit one-service manager behind bare ``submit``."""
+        with self._manager_lock:
+            if self._manager is None:
+                from .manager import TransferManager  # no import cycle
+                # no session pool: bare submit keeps the historical
+                # start/destroy-per-task scope, since nothing ever
+                # calls shutdown on the implicit manager (pooled
+                # sessions would leak their batch worker pools)
+                self._manager = TransferManager(
+                    service=self, max_workers=self.DEFAULT_WORKERS,
+                    per_endpoint_cap=None, share_sessions=False)
+            return self._manager
+
+    def make_task(self, src: Endpoint, dst: Endpoint,
+                  task_id: str | None = None) -> TransferTask:
+        """Create + register the control-channel handle for one task."""
+        if task_id is None:
+            # route digest for debuggability + random uniquifier so
+            # resubmitting the same src->dst never collides with (or
+            # silently inherits the restart markers of) an earlier task
+            basis = f"{src.resolved_id()}:{src.path}->{dst.resolved_id()}:{dst.path}"
+            task_id = (hashlib.sha1(basis.encode()).hexdigest()[:12]
+                       + "-" + os.urandom(4).hex())
+        task = TransferTask(task_id)
+        self._tasks[task_id] = task
+        return task
 
     def submit(self, src: Endpoint, dst: Endpoint,
                options: TransferOptions | None = None,
@@ -619,48 +733,70 @@ class TransferService:
         the default id is unique per submission, so resubmitting the
         same route starts fresh instead of colliding with — or silently
         inheriting the markers of — an earlier task."""
-        options = options or TransferOptions()
-        if task_id is None:
-            # route digest for debuggability + random uniquifier so
-            # resubmitting the same src->dst never collides with (or
-            # silently inherits the restart markers of) a live task
-            basis = f"{src.resolved_id()}:{src.path}->{dst.resolved_id()}:{dst.path}"
-            task_id = (hashlib.sha1(basis.encode()).hexdigest()[:12]
-                       + "-" + os.urandom(4).hex())
-        task = TransferTask(task_id)
-        self._tasks[task_id] = task
-        if sync:
-            self._run(task, src, dst, options)
-        else:
-            t = threading.Thread(target=self._run, args=(task, src, dst, options),
-                                 daemon=True)
-            t.start()
-        return task
+        return self.default_manager().submit(src, dst, options,
+                                             task_id=task_id, sync=sync)
 
     def get(self, task_id: str) -> TransferTask:
         return self._tasks[task_id]
 
     # ---- execution -------------------------------------------------------
+    @contextmanager
+    def _own_sessions(self, src: Endpoint, dst: Endpoint):
+        """Default session scope: start/destroy per run.  A manager with
+        a session pool substitutes shared long-lived sessions instead."""
+        s_src = src.connector.start(self.creds.lookup(src.resolved_id()))
+        try:
+            s_dst = dst.connector.start(self.creds.lookup(dst.resolved_id()))
+            try:
+                yield s_src, s_dst
+            finally:
+                dst.connector.destroy(s_dst)
+        finally:
+            src.connector.destroy(s_src)
+
     def _run(self, task: TransferTask, src: Endpoint, dst: Endpoint,
-             opt: TransferOptions) -> None:
+             opt: TransferOptions, session_scope=None) -> None:
+        """Execute (or re-execute, after a pause) one task.  Progress
+        counters are recomputed from restart markers each run, so a
+        resumed task's stats stay consistent instead of double-counting
+        the bytes that landed before the pause."""
         t_start = time.monotonic()
+        task._idle.clear()
         task.status = TransferTask.ACTIVE
+        with task._lock:
+            st = task.stats
+            st.bytes_total = st.bytes_done = 0
+            st.files_total = st.files_done = st.files_failed = 0
+        task.files = []
+        scope = session_scope or self._own_sessions
         try:
             # third-party coordination / endpoint activation (§5.4)
             self.clock.sleep(opt.startup_cost)
-            s_src = src.connector.start(self.creds.lookup(src.resolved_id()))
-            s_dst = dst.connector.start(self.creds.lookup(dst.resolved_id()))
-            try:
+            with scope(src, dst) as (s_src, s_dst):
                 self._execute(task, src, dst, s_src, s_dst, opt)
-            finally:
-                src.connector.destroy(s_src)
-                dst.connector.destroy(s_dst)
         except Exception as e:
             task.log(f"FATAL {type(e).__name__}: {e}")
-            task.stats.wall_seconds = time.monotonic() - t_start
+            task.stats.wall_seconds += time.monotonic() - t_start
             task._finish(TransferTask.FAILED)
             return
-        task.stats.wall_seconds = time.monotonic() - t_start
+        task.stats.wall_seconds += time.monotonic() - t_start
+        if task._cancel_req.is_set():
+            self.markers.clear(task.task_id)
+            task.log("cancelled")
+            task._finish(TransferTask.CANCELLED)
+            return
+        if task._pause_req.is_set():
+            incomplete = (task.stats.files_done + task.stats.files_failed
+                          < task.stats.files_total)
+            if incomplete:
+                # checkpointed through MarkerStore by the interrupt path;
+                # not done — the manager re-dispatches on resume
+                task.log("paused")
+                task.status = TransferTask.PAUSED
+                task._idle.set()
+                return
+            # the pause lost the race with completion: nothing to resume
+            task._pause_req.clear()
         ok = task.stats.files_failed == 0
         if ok:
             self.markers.clear(task.task_id)
@@ -730,6 +866,8 @@ class TransferService:
         stop = threading.Event()
 
         def next_item():
+            if task.interrupted():
+                return None  # pause/cancel: stop claiming work items
             with qlock:
                 if not work:
                     return None
@@ -740,7 +878,10 @@ class TransferService:
                 if opt.auto_tune and worker_idx >= task_target[0]:
                     with qlock:
                         drained = not work
-                    if drained:  # nothing left to ramp into
+                    # nothing left to ramp into — or a pause/cancel froze
+                    # the queue, which would otherwise spin this worker
+                    # (and wedge the join) forever
+                    if drained or task.interrupted():
                         return
                     time.sleep(0.002)
                     continue
@@ -835,7 +976,8 @@ class TransferService:
                                         {"done": e.st["done"]})
 
             e.pipe = _FilePipe(e.size, e.holes, link, opt, on_written, alg,
-                               single_consumer=True)
+                               single_consumer=True,
+                               abort=task.interrupt_exc)
 
         if entries:
             by_src = {e.spath: e for e in entries}
@@ -875,6 +1017,13 @@ class TransferService:
             e.st["done"] = e.tracker.ranges()
             err = e.pipe._error
             complete = e.size == 0 or e.tracker.covered >= e.size
+            if isinstance(err, TaskInterrupted):
+                # pause/cancel reached this file mid-stream: checkpoint
+                # the partial ranges and leave it pending (neither done
+                # nor failed) for the resume to re-open
+                self.markers.append(task.task_id, e.spath,
+                                    {"done": e.st["done"]})
+                continue
             if err is not None or not complete:
                 if isinstance(err, TransientError) \
                         and id(err) not in counted_errs:
@@ -939,6 +1088,12 @@ class TransferService:
         attempts = 0
         integrity_budget = opt.max_integrity_retries
         while True:
+            if task.interrupted():
+                # pause/cancel between attempts: checkpoint progress and
+                # leave the file pending for the resume
+                self.markers.append(task.task_id, spath,
+                                    {"done": st.get("done", [])})
+                return
             attempts += 1
             result.attempts = attempts
             try:
@@ -970,6 +1125,13 @@ class TransferService:
                                      "checksum": checksum})
                 task.stats.files_done += 1
                 task.files.append(result)
+                return
+            except TaskInterrupted:
+                # mid-stream pause/cancel: _move_one already folded the
+                # landed ranges into st["done"] — checkpoint and leave
+                # the file pending
+                self.markers.append(task.task_id, spath,
+                                    {"done": st.get("done", [])})
                 return
             except TransientError as e:
                 task._note_fault(e)
@@ -1030,7 +1192,8 @@ class TransferService:
                 self.markers.append(task.task_id, spath, {"done": st["done"]})
 
         pipe = _FilePipe(size, holes, link, opt, on_written,
-                         opt.checksum_algorithm if opt.integrity else None)
+                         opt.checksum_algorithm if opt.integrity else None,
+                         abort=task.interrupt_exc)
 
         send_err: list[Exception] = []
 

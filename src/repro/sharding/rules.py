@@ -34,7 +34,16 @@ class AxisRules:
     def physical(self, logical: str | None):
         if logical is None:
             return None
-        return self.mapping.get(logical)
+        axes = self.mapping.get(logical)
+        if isinstance(axes, (tuple, list)):
+            # normalize: PartitionSpec treats ("data",) and "data" the
+            # same, but spec equality does not — single axes stay bare
+            if not axes:
+                return None
+            if len(axes) == 1:
+                return axes[0]
+            return tuple(axes)
+        return axes
 
     def physical_for_dim(self, logical: str | None, dim_size: int | None):
         axes = self.physical(logical)

@@ -34,8 +34,8 @@ from typing import Callable
 from ..connectors import (MemoryConnector, ObjectStoreConnector,
                           PosixConnector, make_cloud)
 from ..connectors.faultproxy import FaultProxyConnector
-from ..core import (Credential, CredentialStore, Endpoint, TransferOptions,
-                    TransferService)
+from ..core import (Credential, CredentialStore, Endpoint, TransferManager,
+                    TransferOptions, TransferService)
 from ..core.clock import Clock
 from ..core.faults import FaultSchedule
 
@@ -353,3 +353,149 @@ class ScenarioRunner:
                 + "\n  ".join(violations)
                 + f"\n  last events: {task.events[-5:]}")
         return result
+
+    # ---- a fleet of tasks under one manager ------------------------------
+    def run_multi(self, n_tasks: int = 4, tenants=("alice", "bob"),
+                  trees=("mixed", "many-small"),
+                  route: str = "posix->memory",
+                  schedule: FaultSchedule | None = None,
+                  options: TransferOptions | None = None,
+                  proxy: str = "dst", max_workers: int = 4,
+                  per_endpoint_cap: int | None = 2,
+                  pause_resume=(), seed: int = 0,
+                  timeout: float = 240.0,
+                  strict: bool = False) -> "MultiScenarioResult":
+        """Run ``n_tasks`` concurrent transfers through ONE
+        :class:`TransferManager` sharing one route's endpoints.
+
+        Task ``i`` belongs to ``tenants[i % len(tenants)]``, moves
+        canonical tree ``trees[i % len(trees)]`` seeded from
+        ``seed + i`` under ``data/t{i}``, and lands under ``out/t{i}``
+        — so per-endpoint caps, tenant fairness, and session sharing
+        are all exercised on live shared state.  ``pause_resume`` names
+        task indexes to pause (best-effort mid-flight; deterministic
+        while queued) and then resume before the final wait.  Per-task
+        end-state invariants are checked exactly as in :meth:`run`,
+        plus manager-level ones: worker budget and per-endpoint caps
+        never exceeded, and the whole fleet finishes."""
+        with self._lock:
+            self._n += 1
+            run_dir = os.path.join(self.base_dir, f"multi{self._n:03d}")
+        os.makedirs(run_dir, exist_ok=True)
+
+        src_kind, dst_kind = route.split("->")
+        src_conn, seed_src, _ = self._make_end(src_kind, run_dir, "srcfs",
+                                               provider="s3")
+        dst_conn, _, read_dst = self._make_end(
+            dst_kind, run_dir, "dstfs",
+            provider="gcs" if src_kind == "cloud" else "s3")
+
+        per_task_files: list[dict[str, bytes]] = []
+        all_files: dict[str, bytes] = {}
+        all_empty: list[str] = []
+        for i in range(n_tasks):
+            files, empty_dirs = canonical_tree(trees[i % len(trees)],
+                                               seed + i)
+            remapped = {f"{SRC_ROOT}/t{i}/" + name[len(SRC_ROOT) + 1:]: data
+                        for name, data in files.items()}
+            per_task_files.append(remapped)
+            all_files.update(remapped)
+            all_empty.extend(f"{SRC_ROOT}/t{i}/" + d[len(SRC_ROOT) + 1:]
+                             for d in empty_dirs)
+        seed_src(all_files, all_empty)
+
+        if schedule is not None and schedule.clock is None:
+            schedule.clock = self.clock
+        if schedule is not None and proxy in ("src", "both"):
+            src_conn = FaultProxyConnector(src_conn, schedule)
+        if schedule is not None and proxy in ("dst", "both"):
+            dst_conn = FaultProxyConnector(dst_conn, schedule)
+
+        creds = CredentialStore()
+        for tenant in tenants:
+            creds.register(f"src-{tenant}", Credential(
+                src_conn.credential_scheme or "local-user",
+                {"identity": tenant}))
+            creds.register(f"dst-{tenant}", Credential(
+                dst_conn.credential_scheme or "local-user",
+                {"identity": tenant}))
+        manager = TransferManager(
+            max_workers=max_workers, per_endpoint_cap=per_endpoint_cap,
+            credential_store=creds,
+            marker_root=os.path.join(run_dir, "markers"), clock=self.clock)
+
+        options = options or TransferOptions(
+            startup_cost=0.0, retry_backoff=0.01, concurrency=2)
+        tasks = []
+        for i in range(n_tasks):
+            tenant = tenants[i % len(tenants)]
+            tasks.append(manager.submit(
+                Endpoint(src_conn, f"{SRC_ROOT}/t{i}", f"src-{tenant}"),
+                Endpoint(dst_conn, f"{DST_ROOT}/t{i}", f"dst-{tenant}"),
+                options, task_id=f"multi-{self._n:03d}-t{i}"))
+
+        for i in pause_resume:
+            manager.pause(tasks[i].task_id)
+        for i in pause_resume:
+            tasks[i].wait_idle(timeout)
+        for i in pause_resume:
+            manager.resume(tasks[i].task_id)
+
+        finished = manager.wait_all(timeout=timeout)
+        dest_all = read_dst() if finished else {}
+
+        results: list[ScenarioResult] = []
+        violations: list[str] = []
+        for i, task in enumerate(tasks):
+            # keys keep the t{i}/ prefix: check_invariants resolves a
+            # FileResult.dst relative to DST_ROOT, so per-task keys must
+            # be "t{i}/rel" or the ok-but-not-byte-exact check could
+            # never find (and thus never fail) a file
+            pfx = f"t{i}/"
+            expected = {name[len(SRC_ROOT) + 1:]: data
+                        for name, data in per_task_files[i].items()}
+            dest = {k: v for k, v in dest_all.items() if k.startswith(pfx)}
+            markers_after = manager.service.markers.load(task.task_id) \
+                if finished else {"files": {"unfinished": True}}
+            task_done = finished and task._done.is_set()
+            v = check_invariants(task, expected, dest, schedule,
+                                 markers_after, task_done, options.integrity)
+            results.append(ScenarioResult(
+                task=task, schedule=schedule, expected=expected, dest=dest,
+                violations=v, route=route, tree=trees[i % len(trees)]))
+            violations.extend(f"task {i}: {x}" for x in v)
+
+        m = manager.metrics
+        if m.peak_active > max_workers:
+            violations.append(f"worker budget exceeded: peak_active "
+                              f"{m.peak_active} > {max_workers}")
+        if per_endpoint_cap is not None:
+            for ep_id, peak in m.peak_by_endpoint.items():
+                if peak > per_endpoint_cap:
+                    violations.append(f"endpoint cap exceeded on {ep_id}: "
+                                      f"{peak} > {per_endpoint_cap}")
+        manager.shutdown(wait=False)
+        result = MultiScenarioResult(results=results, manager=manager,
+                                     violations=violations)
+        if strict and violations:
+            raise AssertionError(
+                f"multi-task scenario over {route} violated invariants:\n  "
+                + "\n  ".join(violations))
+        return result
+
+
+@dataclass
+class MultiScenarioResult:
+    """Outcome of :meth:`ScenarioRunner.run_multi`."""
+
+    results: list[ScenarioResult]
+    manager: TransferManager
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def tasks(self):
+        return [r.task for r in self.results]

@@ -6,6 +6,8 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")  # container may lack it
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,471 @@
+"""TransferManager control-plane behaviour: fleet scheduling, caps,
+tenant fairness, lifecycle (pause/resume/cancel), session sharing, and
+Advisor-driven route selection (paper §2.1-§2.2: the managed third-party
+orchestrator, scaled out)."""
+
+import os
+import threading
+
+import pytest
+
+from repro.connectors import MemoryConnector, PosixConnector
+from repro.core import (Advisor, Credential, CredentialStore, Endpoint,
+                        FaultSchedule, PerfModel, Route, RouteCandidate,
+                        TransferManager, TransferOptions)
+from repro.core.clock import Clock
+from repro.sim import ScenarioRunner
+
+MB = 1024 * 1024
+GB = 1e9
+
+
+def make_manager(tmp_path, creds=None, **kw):
+    creds = creds or CredentialStore()
+    kw.setdefault("max_workers", 4)
+    kw.setdefault("per_endpoint_cap", 2)
+    return TransferManager(credential_store=creds,
+                           marker_root=os.path.join(str(tmp_path), "markers"),
+                           clock=Clock(scale=0.0), **kw)
+
+
+def seeded_posix(tmp_path, files):
+    root = os.path.join(str(tmp_path), "srcroot")
+    conn = PosixConnector(root)
+    for name, payload in files.items():
+        p = os.path.join(root, name)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+    return conn
+
+
+class OpCountingMemory(MemoryConnector):
+    """Counts concurrently-active data-plane ops — independent evidence
+    that the manager's per-endpoint cap holds at the connector."""
+
+    def __init__(self):
+        super().__init__()
+        self._lock = threading.Lock()
+        self.active = 0
+        self.peak = 0
+        self.starts = 0
+
+    def _enter(self):
+        with self._lock:
+            self.active += 1
+            self.peak = max(self.peak, self.active)
+
+    def _exit(self):
+        with self._lock:
+            self.active -= 1
+
+    def start(self, credential=None):
+        with self._lock:
+            self.starts += 1
+        return super().start(credential)
+
+    def recv(self, session, path, channel):
+        self._enter()
+        try:
+            return super().recv(session, path, channel)
+        finally:
+            self._exit()
+
+    def recv_batch(self, session, paths, channel_factory):
+        self._enter()
+        try:
+            return super().recv_batch(session, paths, channel_factory)
+        finally:
+            self._exit()
+
+
+# --------------------------------------------------------------------------
+# acceptance: a chaos fleet across tenants
+# --------------------------------------------------------------------------
+def test_fleet_chaos_pause_resume_byte_exact(tmp_path):
+    """>= 4 concurrent tasks across 2 tenants under an injected
+    FaultSchedule, with a pause->resume mid-run: every task completes
+    byte-exact, caps hold, and markers end cleared."""
+    runner = ScenarioRunner(str(tmp_path), clock=Clock(scale=0.0))
+    schedule = (FaultSchedule(seed=11)
+                .transient(op="recv", at=1, times=1)
+                .transient(op="read", at=3, times=1))
+    res = runner.run_multi(n_tasks=5, tenants=("alice", "bob"),
+                           trees=("mixed", "many-small"),
+                           route="posix->memory", schedule=schedule,
+                           max_workers=3, per_endpoint_cap=2,
+                           pause_resume=(1, 3), seed=7, strict=True)
+    assert res.ok
+    assert len(res.tasks) == 5
+    for task in res.tasks:
+        assert task.status == task.SUCCEEDED, (task.task_id, task.events[-3:])
+    # the schedule actually fired (chaos was live, not a no-op)
+    assert schedule.events
+    m = res.manager.metrics
+    assert m.peak_active <= 3
+    assert all(peak <= 2 for peak in m.peak_by_endpoint.values())
+    assert set(m.dispatches_by_tenant) == {"alice", "bob"}
+
+
+def test_endpoint_cap_holds_at_connector(tmp_path):
+    """Cap evidence measured at the destination connector itself: with
+    per-task concurrency 1, concurrently-active recv ops == concurrently
+    active tasks on that endpoint."""
+    files = {f"d/f{i}.bin": os.urandom(64 * 1024) for i in range(6)}
+    src = seeded_posix(tmp_path, files)
+    dst = OpCountingMemory()
+    creds = CredentialStore()
+    mgr = make_manager(tmp_path, creds, max_workers=4, per_endpoint_cap=2)
+    opts = TransferOptions(startup_cost=0.0, concurrency=1,
+                           coalesce_threshold=0)
+    tasks = [mgr.submit(Endpoint(src, "d", f"src{i}"),
+                        Endpoint(dst, f"out{i}", "the-dst"), opts,
+                        task_id=f"cap{i}")
+             for i in range(6)]
+    assert mgr.wait_all(timeout=60)
+    for t in tasks:
+        assert t.status == t.SUCCEEDED
+    assert mgr.metrics.peak_by_endpoint["the-dst"] <= 2
+    assert dst.peak <= 2
+    mgr.shutdown()
+
+
+def test_pause_resume_no_resend_of_completed_ranges(tmp_path):
+    """Pause mid-transfer; the resume must move only the holes the
+    MarkerStore says are missing (paper §3 'holey' restart, driven
+    through the control plane)."""
+    payload = os.urandom(8 * MB)
+    src = seeded_posix(tmp_path, {"big.bin": payload})
+
+    gate = threading.Event()      # set => reads flow
+    reached = threading.Event()   # first 2 MB landed
+    seen = {"n": 0}
+    lock = threading.Lock()
+
+    class GateMemory(MemoryConnector):
+        def recv(self, session, path, channel):
+            outer = self
+
+            class Wrap:
+                def __getattr__(w, k):
+                    return getattr(channel, k)
+
+                def read(w, offset, length):
+                    with lock:
+                        seen["n"] += length
+                        hit = seen["n"] >= 2 * MB
+                    if hit:
+                        reached.set()
+                        gate.wait(timeout=30)
+                    return channel.read(offset, length)
+
+            super().recv(session, path, Wrap())
+
+    dst = GateMemory()
+    mgr = make_manager(tmp_path)
+    opts = TransferOptions(startup_cost=0.0, blocksize=256 * 1024,
+                           parallelism=1, concurrency=1)
+    task = mgr.submit(Endpoint(src, "big.bin"), Endpoint(dst, "big.bin"),
+                      opts, task_id="pr1")
+    assert reached.wait(30), "transfer never reached the gate"
+    assert mgr.pause("pr1")
+    gate.set()
+    assert task.wait_idle(30)
+    assert task.status == task.PAUSED
+
+    state = mgr.service.markers.load("pr1")
+    done_ranges = state["files"]["big.bin"]["done"]
+    done_bytes = sum(length for _, length in done_ranges)
+    assert 0 < done_bytes < len(payload)
+    assert not state["files"]["big.bin"].get("complete")
+
+    sent = {"n": 0}
+    orig = PosixConnector.send
+
+    def counting_send(self, session, path, channel):
+        class Wrap:
+            def __getattr__(w, k):
+                return getattr(channel, k)
+
+            def write(w, offset, data):
+                sent["n"] += len(data)
+                channel.write(offset, data)
+
+        return orig(self, session, path, Wrap())
+
+    PosixConnector.send = counting_send
+    try:
+        assert mgr.resume("pr1")
+        assert task.wait(60)
+    finally:
+        PosixConnector.send = orig
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    # only the holes crossed the wire on resume
+    assert sent["n"] == len(payload) - done_bytes
+    dst.start(None)
+    assert dst.store.get("big.bin") == payload
+    assert mgr.service.markers.load("pr1") == {"files": {}}
+    assert task.stats.resumes == 1
+    mgr.shutdown()
+
+
+def test_resume_races_inflight_pause(tmp_path):
+    """resume() fired immediately after pause() — before the run loop
+    drains — must still re-queue the task, never wedge it in PAUSED."""
+    payload = os.urandom(4 * MB)
+    src = seeded_posix(tmp_path, {"big.bin": payload})
+
+    gate = threading.Event()
+    reached = threading.Event()
+    seen = {"n": 0}
+    lock = threading.Lock()
+
+    class GateMemory(MemoryConnector):
+        def recv(self, session, path, channel):
+            outer = self
+
+            class Wrap:
+                def __getattr__(w, k):
+                    return getattr(channel, k)
+
+                def read(w, offset, length):
+                    with lock:
+                        seen["n"] += length
+                        hit = seen["n"] >= MB
+                    if hit:
+                        reached.set()
+                        gate.wait(timeout=30)
+                    return channel.read(offset, length)
+
+            super().recv(session, path, Wrap())
+
+    dst = GateMemory()
+    mgr = make_manager(tmp_path)
+    opts = TransferOptions(startup_cost=0.0, blocksize=256 * 1024,
+                           parallelism=1, concurrency=1)
+    task = mgr.submit(Endpoint(src, "big.bin"), Endpoint(dst, "big.bin"),
+                      opts, task_id="race1")
+    assert reached.wait(30)
+    assert mgr.pause("race1")
+    # no wait_idle: the pause is still draining when we resume
+    assert mgr.resume("race1")
+    gate.set()
+    assert task.wait(60)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    dst.start(None)
+    assert dst.store.get("big.bin") == payload
+    mgr.shutdown()
+
+
+def test_pause_queued_and_cancel(tmp_path):
+    files = {f"d/f{i}.bin": os.urandom(32 * 1024) for i in range(3)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    mgr = make_manager(tmp_path, max_workers=1)
+
+    gate = threading.Event()
+    reached = threading.Event()
+
+    class SlowSrc(PosixConnector):
+        def send(self, session, path, channel):
+            reached.set()
+            gate.wait(timeout=30)
+            return super().send(session, path, channel)
+
+    slow = SlowSrc(src.root)
+    opts = TransferOptions(startup_cost=0.0, coalesce_threshold=0)
+    t_busy = mgr.submit(Endpoint(slow, "d"), Endpoint(dst, "busy"), opts,
+                        task_id="busy")
+    t_queued = mgr.submit(Endpoint(src, "d"), Endpoint(dst, "q"), opts,
+                          task_id="queued")
+    t_cancel = mgr.submit(Endpoint(src, "d"), Endpoint(dst, "c"), opts,
+                          task_id="doomed")
+    assert reached.wait(10)
+    # one-slot manager: the other two are still queued -> deterministic
+    assert mgr.pause("queued")
+    assert t_queued.status == t_queued.PAUSED
+    assert mgr.cancel("doomed")
+    assert t_cancel.status == t_cancel.CANCELLED
+    gate.set()
+    assert t_busy.wait(60)
+    # paused task does not run until resumed
+    assert t_queued.status == t_queued.PAUSED
+    # wait_all must not wedge on (or wait for) the paused task
+    assert mgr.wait_all(timeout=10)
+    assert t_queued.status == t_queued.PAUSED
+    assert mgr.resume("queued")
+    assert t_queued.wait(60)
+    assert t_queued.status == t_queued.SUCCEEDED
+    assert mgr.wait_all(timeout=60)
+    dst.start(None)
+    assert dst.store.get("q/f0.bin") == files["d/f0.bin"]
+    # cancelled before running: nothing landed
+    assert not any(k.startswith("c/") for k in dst.store.keys())
+    mgr.shutdown()
+
+
+def test_tenant_fair_round_robin(tmp_path):
+    """A tenant flooding the queue cannot starve another: dispatch order
+    alternates tenants even when one submitted everything first."""
+    files = {"d/f.bin": os.urandom(16 * 1024)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    creds = CredentialStore()
+    creds.register("src-alice", Credential("local-user",
+                                           {"identity": "alice"}))
+    creds.register("src-bob", Credential("local-user", {"identity": "bob"}))
+    mgr = make_manager(tmp_path, creds, max_workers=1,
+                       per_endpoint_cap=None)
+
+    gate = threading.Event()
+
+    class Gated(PosixConnector):
+        def send(self, session, path, channel):
+            gate.wait(timeout=30)
+            return super().send(session, path, channel)
+
+    gated = Gated(src.root)
+    opts = TransferOptions(startup_cost=0.0)
+    # alice floods 4 tasks, then bob submits 2
+    for i in range(4):
+        mgr.submit(Endpoint(gated, "d", "src-alice"),
+                   Endpoint(dst, f"a{i}"), opts, task_id=f"a{i}")
+    for i in range(2):
+        mgr.submit(Endpoint(gated, "d", "src-bob"),
+                   Endpoint(dst, f"b{i}"), opts, task_id=f"b{i}")
+    gate.set()
+    assert mgr.wait_all(timeout=60)
+    order = [tenant for tenant, _ in mgr.metrics.dispatch_log]
+    # bob's first task is dispatched before alice's queue drains
+    first_bob = order.index("bob")
+    assert first_bob <= 2, order
+    assert mgr.metrics.dispatches_by_tenant == {"alice": 4, "bob": 2}
+    mgr.shutdown()
+
+
+def test_priority_within_tenant(tmp_path):
+    files = {"d/f.bin": os.urandom(8 * 1024)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    mgr = make_manager(tmp_path, max_workers=1)
+
+    gate = threading.Event()
+
+    class Gated(PosixConnector):
+        def send(self, session, path, channel):
+            gate.wait(timeout=30)
+            return super().send(session, path, channel)
+
+    gated = Gated(src.root)
+    opts = TransferOptions(startup_cost=0.0)
+    mgr.submit(Endpoint(gated, "d"), Endpoint(dst, "o0"), opts,
+               task_id="first")  # occupies the slot
+    mgr.submit(Endpoint(gated, "d"), Endpoint(dst, "o1"), opts,
+               task_id="later", priority=5)
+    mgr.submit(Endpoint(gated, "d"), Endpoint(dst, "o2"), opts,
+               task_id="urgent", priority=0)
+    gate.set()
+    assert mgr.wait_all(timeout=60)
+    ids = [tid for _, tid in mgr.metrics.dispatch_log]
+    assert ids.index("urgent") < ids.index("later")
+    mgr.shutdown()
+
+
+def test_session_sharing_across_tasks(tmp_path):
+    """One Session per endpoint for the whole fleet — not one per task."""
+    files = {f"d/f{i}.bin": os.urandom(16 * 1024) for i in range(2)}
+    src = seeded_posix(tmp_path, files)
+    dst = OpCountingMemory()
+    mgr = make_manager(tmp_path, max_workers=2)
+    opts = TransferOptions(startup_cost=0.0)
+    for i in range(4):
+        mgr.submit(Endpoint(src, "d"), Endpoint(dst, f"out{i}", "dst-ep"),
+                   opts, task_id=f"s{i}")
+    assert mgr.wait_all(timeout=60)
+    assert dst.starts == 1  # shared, not 4
+    assert mgr.sessions.live_sessions == 2  # src + dst, still warm
+    mgr.shutdown()
+    assert mgr.sessions.live_sessions == 0
+
+
+def _mk_model(route, t0, R, s0=0.0, B=GB):
+    return PerfModel(route=route, t0=t0, alpha=B / R + s0,
+                     bytes_total=int(B), s0=s0)
+
+
+def test_advisor_route_selection_and_refit(tmp_path):
+    """Candidates are placed by the fitted models; predictions and
+    actuals land in TaskStats; the observation log refits the route."""
+    files = {f"d/f{i}.bin": os.urandom(4 * 1024) for i in range(8)}
+    src = seeded_posix(tmp_path, files)
+    fast_dst = MemoryConnector()
+    slow_dst = MemoryConnector()
+    advisor = Advisor([
+        Route("fast", _mk_model("fast", t0=0.01, R=500e6)),
+        Route("slow", _mk_model("slow", t0=2.0, R=5e6)),
+    ])
+    mgr = make_manager(tmp_path, advisor=advisor, max_workers=1)
+    candidates = [
+        RouteCandidate("slow", Endpoint(src, "d"),
+                       Endpoint(slow_dst, "out")),
+        RouteCandidate("fast", Endpoint(src, "d"),
+                       Endpoint(fast_dst, "out")),
+    ]
+    shared_opts = TransferOptions(startup_cost=0.0)
+    task = mgr.submit(candidates=candidates, options=shared_opts,
+                      task_id="routed", sync=True)
+    assert task.status == task.SUCCEEDED
+    assert task.stats.route == "fast"
+    # the advisor tunes a per-task copy, never the caller's options
+    assert shared_opts.concurrency == TransferOptions().concurrency
+    assert shared_opts.coalesce_threshold == \
+        TransferOptions().coalesce_threshold
+    assert task.stats.predicted_seconds > 0
+    assert task.stats.actual_model_seconds >= 0
+    fast_dst.start(None)
+    assert fast_dst.store.get("out/f0.bin") == files["d/f0.bin"]
+    assert slow_dst.store.keys() == []
+
+    # vary the workload so the observation log supports a refit
+    for i, n in enumerate((2, 4, 6)):
+        sub = {f"w{i}/g{j}.bin": os.urandom(2 * 1024) for j in range(n)}
+        subsrc = seeded_posix(os.path.join(str(tmp_path), f"w{i}"), sub)
+        mgr.submit(candidates=[
+            RouteCandidate("fast", Endpoint(subsrc, f"w{i}"),
+                           Endpoint(fast_dst, f"r{i}"))],
+            options=TransferOptions(startup_cost=0.0),
+            task_id=f"obs{i}", sync=True)
+    obs = mgr.observations("fast")
+    assert len(obs) == 4
+    model = mgr.refit_route("fast", min_points=3)
+    assert model is not None
+    assert advisor.routes[0].model is model
+    mgr.shutdown()
+
+
+def test_unknown_candidate_route_raises(tmp_path):
+    mgr = make_manager(tmp_path, advisor=Advisor())
+    with pytest.raises(ValueError):
+        mgr.submit(candidates=[RouteCandidate(
+            "nope", Endpoint(MemoryConnector(), "a"),
+            Endpoint(MemoryConnector(), "b"))])
+    with pytest.raises(ValueError):
+        mgr.submit()  # neither src/dst nor candidates
+    mgr.shutdown(wait=False)
+
+
+def test_degenerate_service_submit_is_managed(tmp_path):
+    """A bare service.submit rides the same control plane (the implicit
+    manager) and still behaves exactly as before."""
+    from repro.core import TransferService
+    svc = TransferService(marker_root=os.path.join(str(tmp_path), "m"),
+                         clock=Clock(scale=0.0))
+    payload = os.urandom(MB)
+    src = seeded_posix(tmp_path, {"a.bin": payload})
+    dst = MemoryConnector()
+    task = svc.submit(Endpoint(src, "a.bin"), Endpoint(dst, "a.bin"),
+                      TransferOptions(startup_cost=0.0), sync=True)
+    assert task.status == task.SUCCEEDED
+    dst.start(None)
+    assert dst.store.get("a.bin") == payload
+    assert svc.default_manager().metrics.completed == 1

@@ -103,3 +103,59 @@ def test_degenerate_inputs_raise():
         fit_linear([1], [2])
     with pytest.raises(ValueError):
         fit_linear([3, 3, 3], [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Advisor edge cases — load-bearing now that the TransferManager consults
+# the advisor on every routed submission
+# ---------------------------------------------------------------------------
+def test_best_with_zero_routes_raises():
+    with pytest.raises(ValueError):
+        Advisor().best(n_files=10, nbytes=1_000_000)
+
+
+def test_best_survives_degenerate_fit():
+    """A model fit on pure noise (rho/r^2 ~ 0) must still rank without
+    NaNs or crashes — the manager calls best() on every submission."""
+    xs = [10, 20, 40, 80, 160]
+    ys = [5.0, 6.0, 5.0, 6.0, 5.0]  # no N-dependence at all
+    m = fit_perf_model("noise/up", xs, ys, bytes_total=int(1 * GB))
+    assert abs(m.rho) < 0.5
+    assert m.r2 < 0.1
+    adv = Advisor([Route("noisy", m)])
+    route, cc, t = adv.best(n_files=500, nbytes=int(1 * GB))
+    assert route.name == "noisy"
+    assert cc >= 1
+    assert math.isfinite(t) and t >= 0
+    # coalesce helpers must also stay finite/sane on the same fit
+    assert adv.coalesce_threshold() >= 0
+    assert 1 <= adv.coalesce_advice(1000, int(1 * GB)) <= 1000
+
+
+def test_best_with_zero_max_concurrency_route():
+    adv = Advisor([Route("r", _mk_model("r", t0=0.1, R=100e6),
+                         max_concurrency=0)])
+    route, cc, t = adv.best(n_files=100, nbytes=int(1 * GB))
+    assert cc == 1  # cc=1 is always rankable
+    assert math.isfinite(t)
+
+
+def test_coalesce_threshold_monotone_in_t0_and_rate():
+    """Break-even size t0*R must grow with per-file overhead and with
+    line rate, and degenerate fits must disable batching (0)."""
+    R = 200e6
+    thresholds = [Advisor([Route("r", _mk_model("r", t0=t0, R=R))])
+                  .coalesce_threshold() for t0 in (0.0, 0.01, 0.1, 0.5)]
+    assert thresholds[0] == 0  # no measurable overhead -> batching off
+    assert thresholds == sorted(thresholds)
+    assert thresholds[-1] > thresholds[1]
+    t0 = 0.05
+    by_rate = [Advisor([Route("r", _mk_model("r", t0=t0, R=r))])
+               .coalesce_threshold() for r in (50e6, 200e6, 800e6)]
+    assert by_rate == sorted(by_rate)
+    # infinite implied throughput (alpha <= s0) cannot overflow int()
+    degenerate = PerfModel(route="d", t0=0.1, alpha=1.0, bytes_total=10**9,
+                           s0=2.0)
+    assert not math.isfinite(degenerate.throughput) or \
+        degenerate.throughput > 0
+    assert Advisor([Route("d", degenerate)]).coalesce_threshold() == 0

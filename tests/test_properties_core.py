@@ -2,6 +2,9 @@
 
 import os
 
+import pytest
+
+pytest.importorskip("hypothesis")  # container may lack it
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
