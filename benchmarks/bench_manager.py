@@ -1,4 +1,5 @@
-"""Control-plane benchmark: aggregate goodput and fairness vs task count.
+"""Control-plane benchmarks: fleet goodput/fairness, dispatch cost, and
+the online-refit convergence curve.
 
 The paper's managed service earns its keep by running *many* transfers
 concurrently (§2.1); this bench drives a :class:`TransferManager` fleet
@@ -13,16 +14,30 @@ over an emulated S3 route and reports, per task count:
 Uses the real (scaled) clock so concurrent tasks genuinely overlap —
 virtual-clock accounting cannot observe overlap (see common.py).
 
-Emits: ``manager.fleet.nNN`` rows with ``goodput=... jain=...``.
+Two further control-plane measurements ride along:
+
+* ``manager.dispatch.pick5k`` — scheduler pick cost draining a
+  5000-submission queue (guards the lazy-deletion heap: the old
+  sorted+remove+heapify pick was O(n log n) *per dispatch*);
+* ``manager.refit.*`` — the closed-loop refit curve: a 30-task fleet
+  submitted against a deliberately miscalibrated route model, median
+  |prediction error| per completion window.  Charge-accounted per-task
+  model time (exact under concurrency) is what makes these
+  observations fit-worthy; the curve must fall once auto-refit fires.
+
+Emits: ``manager.fleet.nNN`` rows with ``goodput=... jain=...``, plus
+the dispatch and refit rows above.
 """
 
 from __future__ import annotations
 
+import statistics
 import tempfile
 import time
 
-from repro.core import (Credential, Endpoint, TransferManager,
-                        TransferOptions)
+from repro.core import (Advisor, Credential, Endpoint, PerfModel, Route,
+                        RouteCandidate, TransferManager, TransferOptions)
+from repro.core.clock import Clock
 
 from .common import MB, QUICK, emit, make_env, seed_local_files, \
     split_dataset
@@ -50,6 +65,118 @@ def _jain(rates: list[float]) -> float:
     total = sum(rates)
     sq = sum(r * r for r in rates)
     return (total * total) / (len(rates) * sq) if sq > 0 else 1.0
+
+
+#: dispatch micro-benchmark: queue depth + the wall-clock guard.  The
+#: pre-lazy-heap scheduler took O(n log n) per pick — a 5k drain was
+#: minutes; the lazy-deletion heap drains it in well under the bound.
+DISPATCH_QUEUE = 5000
+DISPATCH_BOUND_S = 2.0
+
+REFIT_TASKS = 30
+REFIT_EVERY = 5
+REFIT_WINDOW = 6
+
+
+def bench_dispatch() -> dict:
+    """Drain a 5k-submission queue through the scheduler (no data plane:
+    submissions are enqueued directly and picks activated inline), and
+    fail the suite if dispatch cost regresses past the bound."""
+    from repro.core.manager import _Submission
+    from repro.core.transfer import TransferTask
+    from repro.connectors import MemoryConnector
+
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = TransferManager(
+            max_workers=DISPATCH_QUEUE + 1, per_endpoint_cap=None,
+            share_sessions=False, marker_root=f"{tmp}/markers",
+            clock=Clock(scale=0.0))
+        conn = MemoryConnector()
+        with mgr._lock:
+            for i in range(DISPATCH_QUEUE):
+                sub = _Submission(
+                    TransferTask(f"d{i}"),
+                    Endpoint(conn, "a", f"src{i % 16}"),
+                    Endpoint(conn, "b", f"dst{i % 16}"),
+                    TransferOptions(), f"tenant{i % 8}",
+                    priority=i % 5, seq=next(mgr._seq))
+                mgr._enqueue_locked(sub)
+        t0 = time.perf_counter()
+        picked = 0
+        with mgr._lock:
+            while True:
+                sub = mgr._pick_locked()
+                if sub is None:
+                    break
+                mgr._activate_locked(sub)
+                picked += 1
+        dt = time.perf_counter() - t0
+        assert picked == DISPATCH_QUEUE, f"only {picked} picks drained"
+        assert dt < DISPATCH_BOUND_S, \
+            f"dispatch regressed: {dt:.2f}s to drain {picked} submissions"
+        emit("manager.dispatch.pick5k", dt / picked,
+             f"total={dt * 1e3:.0f}ms n={picked}")
+        return {"total_s": dt, "per_pick_us": dt / picked * 1e6}
+
+
+def bench_refit() -> dict:
+    """Refit-convergence curve: 30 tasks routed by a model whose seed
+    fit is ~100x off; the manager auto-refits every REFIT_EVERY
+    completions from charge-accounted observations and re-predicts the
+    still-queued tail.  Pure accounting (scale 0): per-task model time
+    is exact under overlap, so no wall clock is needed."""
+    with tempfile.TemporaryDirectory() as tmp:
+        env = make_env(tmp, virtual=True)
+        _, conn = env.cloud("drive", "local", quota_rate=10_000,
+                            quota_burst=100_000, consistency_delay=0.0)
+        # seed model: per-file overhead two orders of magnitude off
+        seed = PerfModel(route="drive", t0=20.0, alpha=1e9 / 40e6,
+                         bytes_total=int(1e9))
+        advisor = Advisor([Route("drive", seed, max_concurrency=1)])
+        manager = TransferManager(service=env.service, advisor=advisor,
+                                  max_workers=4, per_endpoint_cap=None,
+                                  refit_every=REFIT_EVERY)
+        opts = TransferOptions(startup_cost=0.0)
+        tasks = []
+        for i in range(REFIT_TASKS):
+            n_files = 4 + 4 * (i % 3)
+            parts = split_dataset(n_files * 2048, n_files)
+            src = seed_local_files(env, f"refit{i}", parts)
+            tasks.append(manager.submit(
+                candidates=[RouteCandidate(
+                    "drive", Endpoint(env.local, src),
+                    Endpoint(conn, f"bkt/refit{i}"))],
+                options=opts, task_id=f"refit-{i}",
+                n_files=n_files, nbytes=n_files * 2048))
+        ok = manager.wait_all(timeout=600)
+        assert ok, "refit fleet did not finish"
+        for t in tasks:
+            assert t.status == t.SUCCEEDED, t.events[-3:]
+        n_refits = manager.metrics.refits.get("drive", 0)
+        assert n_refits >= 1, "auto-refit never fired over 30 completions"
+
+        log = list(manager.metrics.prediction_log)  # completion order
+        out = {"refits": n_refits, "windows": []}
+        for w in range(0, len(log), REFIT_WINDOW):
+            rows = log[w:w + REFIT_WINDOW]
+            med = statistics.median(
+                abs(p - a) / max(a, 1e-9) for _, _, p, a in rows)
+            gens = sorted({g for _, g, _, _ in rows})
+            out["windows"].append(med)
+            emit(f"manager.refit.w{w // REFIT_WINDOW}", med,
+                 f"median_rel_err={med:.3f} gens={gens} n={len(rows)}")
+        first, last = out["windows"][0], out["windows"][-1]
+        assert last < first, \
+            f"refit did not converge: median err {last:.3f} !< {first:.3f}"
+        pre = manager.prediction_error(generation=0)
+        post = manager.prediction_error(min_generation=1)
+        assert post is not None and post < pre, (pre, post)
+        emit("manager.refit.curve", 0.0,
+             f"first={first:.3f} last={last:.3f} pre={pre:.3f} "
+             f"post={post:.3f} refits={n_refits}")
+        out["pre"], out["post"] = pre, post
+        manager.shutdown(wait=False)
+        return out
 
 
 def run() -> dict:
@@ -112,7 +239,8 @@ def run() -> dict:
     emit("manager.fleet.scaling", 0.0,
          f"x{top / max(base, 1e-9):.2f} goodput at n={TASK_COUNTS[-1]} "
          f"(workers={MAX_WORKERS})")
-    return out
+    return {"fleet": out, "dispatch": bench_dispatch(),
+            "refit": bench_refit()}
 
 
 if __name__ == "__main__":

@@ -112,6 +112,37 @@ def main():
               f"pauses={m.pauses} resumes={m.resumes}")
         print(f"  dispatch fairness: {m.dispatches_by_tenant}")
 
+    print("\n== closed-loop online refit (§5: characterize without "
+          "exhaustive benchmarking) ==")
+    # Model time is charge-accounted per task (every clock charge names
+    # its owning task), so a concurrent fleet's observations are exact —
+    # and the manager refits each route automatically every
+    # ``refit_every`` completions, re-predicting the still-queued tail.
+    # Start from a model that is ~1000x wrong and watch it converge.
+    from repro.core import Advisor, PerfModel, Route
+    with tempfile.TemporaryDirectory() as tmp:
+        runner = ScenarioRunner(tmp)
+        bad_seed = PerfModel(route="fleet", t0=3.0, alpha=1e9 / 40e6,
+                             bytes_total=int(1e9))
+        fleet = runner.run_multi(
+            n_tasks=10, tenants=("alice", "bob"),
+            trees=("many-small", "mixed"), route="posix->memory",
+            schedule=FaultSchedule(seed=5).transient(op="read", at=4,
+                                                     times=2),
+            max_workers=3, per_endpoint_cap=None,
+            advisor=Advisor([Route("fleet", bad_seed,
+                                   max_concurrency=1)]),
+            refit_every=3, strict=True)
+        mgr = fleet.manager
+        pre = mgr.prediction_error(generation=0)
+        post = mgr.prediction_error(min_generation=1)
+        print(f"  refits={mgr.metrics.refits.get('fleet', 0)} "
+              f"median |pred err|: seed model {pre:.2f} -> "
+              f"refit model {post:.2f}")
+        print(f"  fitted t0 {bad_seed.t0:.2f}s/file -> "
+              f"{mgr.advisor.routes[0].model.t0 * 1e3:.1f}ms/file "
+              f"from live traffic")
+
     print("\n== small-file regime: coalesced batches (paper §5.3.2/§8) ==")
     # Eq. 4 says per-file overhead t0 dominates many-small-file
     # transfers.  The service coalesces files below

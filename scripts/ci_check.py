@@ -8,6 +8,7 @@ pushing:
     python scripts/ci_check.py --only tier1,bench
 
 Lanes:
+  hygiene  fail on tracked bytecode artifacts (__pycache__ / *.pyc)
   compile  byte-compile src/benchmarks/examples/scripts/tests
   tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow"
   chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
@@ -24,7 +25,17 @@ import time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+#: mirrors the CI "No tracked bytecode artifacts" step
+_HYGIENE_SNIPPET = (
+    "import re, subprocess, sys\n"
+    "files = subprocess.run(['git', 'ls-files'], capture_output=True,\n"
+    "                       text=True, check=True).stdout.splitlines()\n"
+    "bad = [f for f in files if re.search(r'(^|/)__pycache__/|\\.py[cod]$', f)]\n"
+    "print('\\n'.join(bad))\n"
+    "sys.exit(1 if bad else 0)\n")
+
 LANES: dict[str, list[str]] = {
+    "hygiene": [sys.executable, "-c", _HYGIENE_SNIPPET],
     "compile": [sys.executable, "-m", "compileall", "-q",
                 "src", "benchmarks", "examples", "scripts", "tests"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",

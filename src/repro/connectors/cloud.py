@@ -24,7 +24,8 @@ import threading
 import warnings
 from dataclasses import dataclass, field, replace
 
-from ..core.clock import Clock, DEFAULT_CLOCK, Link, TokenBucket
+from ..core.clock import (Clock, DEFAULT_CLOCK, Link, TokenBucket,
+                          bind_charge_owner)
 from ..core.connector import AppChannel, Connector, Credential, Session, StatInfo
 from ..core.errors import AuthError, FaultInjected, NotFound, RateLimitError
 from ..core.faults import FaultSchedule
@@ -428,6 +429,7 @@ class ObjectStoreConnector(Connector):
 
     def _pool(self, channel: AppChannel, worker) -> None:
         cc = max(1, channel.get_concurrency())
+        worker = bind_charge_owner(worker)
         threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
         for t in threads:
             t.start()

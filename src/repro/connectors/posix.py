@@ -15,6 +15,7 @@ import os
 import shutil
 import threading
 
+from ..core.clock import bind_charge_owner
 from ..core.connector import AppChannel, ByteRange, Connector, Session, StatInfo
 from ..core.errors import NotFound, PermanentError
 
@@ -151,7 +152,8 @@ class PosixConnector(Connector):
             except Exception as e:  # pragma: no cover - surfaced below
                 err.append(e)
 
-        threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
+        threads = [threading.Thread(target=bind_charge_owner(worker),
+                                    daemon=True) for _ in range(cc)]
         for t in threads:
             t.start()
         for t in threads:
@@ -187,7 +189,8 @@ class PosixConnector(Connector):
                     pass
 
         cc = max(1, channel.get_concurrency())
-        threads = [threading.Thread(target=worker, daemon=True) for _ in range(cc)]
+        threads = [threading.Thread(target=bind_charge_owner(worker),
+                                    daemon=True) for _ in range(cc)]
         for t in threads:
             t.start()
         for t in threads:

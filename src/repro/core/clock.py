@@ -19,14 +19,62 @@ The link model reproduces the phenomena the paper measures:
 
 from __future__ import annotations
 
+import functools
 import os
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 
 def _env_scale() -> float:
     return float(os.environ.get("REPRO_TIME_SCALE", "0.0"))
+
+
+# --------------------------------------------------------------------------
+# charge attribution
+# --------------------------------------------------------------------------
+#: thread-local charge owner, shared by every Clock instance so one task
+#: keeps a single identity across the service clock, link clocks, and
+#: fault-schedule clocks
+_attribution = threading.local()
+
+
+def current_charge_owner() -> str | None:
+    """The owner (task id) the current thread charges model time to."""
+    return getattr(_attribution, "owner", None)
+
+
+@contextmanager
+def charge_to(owner: str | None):
+    """Attribute every model-time charge made by this thread (latency,
+    bandwidth, backoff, injected delay) to ``owner`` for the duration of
+    the block.  Nests: the previous owner is restored on exit."""
+    prev = getattr(_attribution, "owner", None)
+    _attribution.owner = owner
+    try:
+        yield
+    finally:
+        _attribution.owner = prev
+
+
+def bind_charge_owner(fn):
+    """Capture the *calling* thread's charge owner and re-establish it in
+    whichever thread eventually runs ``fn``.  This is how attribution
+    crosses thread boundaries: per-task worker threads, sender threads,
+    connector stream pools, and — critically — session-level batch pools
+    that are shared across tasks (the owner is captured per submitted
+    work item, not per pool thread)."""
+    owner = current_charge_owner()
+    if owner is None:
+        return fn
+
+    @functools.wraps(fn)
+    def bound(*args, **kwargs):
+        with charge_to(owner):
+            return fn(*args, **kwargs)
+
+    return bound
 
 
 class Clock:
@@ -47,12 +95,18 @@ class Clock:
         self._virtual = 0.0
         self._lock = threading.Lock()
         self._debt = threading.local()
+        #: owner -> model seconds charged while that owner was current
+        self._charges: dict[str, float] = {}
 
     def sleep(self, model_seconds: float) -> None:
         if model_seconds <= 0:
             return
+        owner = current_charge_owner()
         with self._lock:
             self._virtual += model_seconds
+            if owner is not None:
+                self._charges[owner] = \
+                    self._charges.get(owner, 0.0) + model_seconds
         if self.scale <= 0:
             return
         real = model_seconds * self.scale
@@ -66,6 +120,20 @@ class Clock:
     @property
     def virtual_elapsed(self) -> float:
         return self._virtual
+
+    def charged(self, owner: str) -> float:
+        """Model seconds charged to ``owner`` on this clock.  Unlike
+        ``virtual_elapsed`` (which every concurrent task inflates), this
+        is exact per task: concurrent tasks partition the clock's total
+        instead of each observing all of it."""
+        with self._lock:
+            return self._charges.get(owner, 0.0)
+
+    def forget(self, owner: str) -> None:
+        """Drop a finished owner's tally so the charge table stays
+        bounded over a long-lived fleet."""
+        with self._lock:
+            self._charges.pop(owner, None)
 
     def now(self) -> float:
         return time.monotonic()

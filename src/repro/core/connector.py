@@ -43,6 +43,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Iterator, Sequence
 
+from .clock import bind_charge_owner
 from .errors import SessionClosed
 
 
@@ -264,12 +265,16 @@ class Connector(ABC):
         ``channel.finished``), so ``fut.result()`` never raises for a
         single bad file."""
         pool = session.worker_pool(pool_size or self.BATCH_POOL_SIZE)
+        # the session pool is shared by every task on this session, so
+        # the submitting task's charge owner is captured per work item —
+        # a pool thread charges whichever task's file it is moving
+        run = bind_charge_owner(one)
         futures = []
         for path in paths:
             channel = channel_factory(path)
             if channel is None:
                 continue
-            futures.append(pool.submit(one, path, channel))
+            futures.append(pool.submit(run, path, channel))
         for fut in futures:
             fut.result()
 

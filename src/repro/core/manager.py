@@ -19,12 +19,20 @@ many tasks at once for performance, error handling, and integrity
 * session sharing: one live connector :class:`Session` per endpoint,
   refcounted across every task that touches it (a
   :class:`SessionPool`), instead of a start/destroy pair per task;
-* model-driven routing: a submission naming multiple candidate routes
-  is placed by :meth:`~repro.core.perfmodel.Advisor.best`, the batch
-  policy sized by :meth:`~repro.core.perfmodel.Advisor.coalesce_threshold`,
-  and the prediction vs. the model-clock actual recorded in
-  :class:`~repro.core.transfer.TaskStats` so the per-route perf model
-  can be refit online from live traffic (:meth:`TransferManager.refit_route`).
+* model-driven routing, closed-loop: a submission naming multiple
+  candidate routes is placed by :meth:`~repro.core.perfmodel.Advisor.best`,
+  the batch policy sized by
+  :meth:`~repro.core.perfmodel.Advisor.coalesce_threshold`, and the
+  prediction vs. the *charge-accounted* model-time actual (exact per
+  task even under concurrency — every clock charge names its owning
+  task, see :mod:`repro.core.clock`) recorded in
+  :class:`~repro.core.transfer.TaskStats`.  Every ``refit_every``
+  completions per route the manager refits that route's perf model from
+  a bounded ring of recent observations and pushes the refreshed
+  ``coalesce_threshold``/concurrency into still-queued submissions, so
+  a live fleet converges without resubmission (the paper's §5 "easily
+  characterized in different contexts without exhaustive benchmarking",
+  automated).
 
 :class:`~repro.core.transfer.TransferService` keeps the per-task engine
 (expansion, pipes, batches, retries, markers); a bare ``service.submit``
@@ -35,10 +43,13 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import statistics
 import threading
+from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 
+from .clock import charge_to
 from .connector import Session, iter_files
 from .perfmodel import Advisor, Route, fit_perf_model
 from .transfer import (Endpoint, TransferOptions, TransferService,
@@ -48,6 +59,20 @@ from .transfer import (Endpoint, TransferOptions, TransferService,
 # --------------------------------------------------------------------------
 # session sharing across tasks
 # --------------------------------------------------------------------------
+class _PoolEntry:
+    """One pooled session generation: its own refcount and drain flag.
+    A fresh generation replacing a dead session starts at refcount 0 and
+    stale holders of the old generation can never touch it — releases
+    are matched by session identity, not by endpoint key."""
+
+    __slots__ = ("session", "refs", "draining")
+
+    def __init__(self, session: Session):
+        self.session = session
+        self.refs = 0
+        self.draining = False
+
+
 class SessionPool:
     """One live connector session per endpoint, shared by every task the
     manager runs against it.
@@ -58,14 +83,26 @@ class SessionPool:
     ``acquire`` starts a session on first use, every later task reuses
     it, and sessions stay warm between tasks until :meth:`close_all`
     (manager shutdown) destroys them.
+
+    Each pooled session is a :class:`_PoolEntry` *generation*: when a
+    session dies mid-task (provider drop, chaos) the next ``acquire``
+    starts a replacement generation, and the dead generation's holders
+    release against *their* entry — never the replacement's refcount —
+    so a stale release can neither go negative nor destroy a live
+    session early.  Draining is likewise per generation: ``close_all``
+    retires the entries that exist at that moment, and the pool stays
+    usable for later work instead of destroying every future session at
+    refcount zero.
     """
 
     def __init__(self, creds):
         self._creds = creds
         self._lock = threading.Lock()
-        #: key -> [session, refcount]
-        self._sessions: dict[tuple, list] = {}
-        self._draining = False
+        #: key -> current generation for that endpoint
+        self._current: dict[tuple, _PoolEntry] = {}
+        #: id(session) -> its entry, for every generation still holding
+        #: references (current or retired)
+        self._by_session: dict[int, _PoolEntry] = {}
 
     @staticmethod
     def _key(ep: Endpoint) -> tuple:
@@ -73,44 +110,65 @@ class SessionPool:
 
     def acquire(self, ep: Endpoint) -> Session:
         with self._lock:
-            entry = self._sessions.get(self._key(ep))
-            if entry is None or entry[0].closed:
+            key = self._key(ep)
+            entry = self._current.get(key)
+            if entry is None or entry.session.closed or entry.draining:
+                if entry is not None and entry.refs <= 0:
+                    # a generation that died while idle has no holders
+                    # left to drain it — drop its tracking entry here
+                    self._by_session.pop(id(entry.session), None)
                 session = ep.connector.start(
                     self._creds.lookup(ep.resolved_id()))
-                entry = self._sessions[self._key(ep)] = [session, 0]
-            entry[1] += 1
-            return entry[0]
+                entry = _PoolEntry(session)
+                self._current[key] = entry
+                self._by_session[id(session)] = entry
+            entry.refs += 1
+            return entry.session
 
-    def release(self, ep: Endpoint) -> None:
+    def release(self, ep: Endpoint, session: Session) -> None:
+        """Return one reference on ``session``.  A release against a
+        generation that has since been replaced only drains that old
+        generation; if the session is unknown (already fully drained)
+        it is a no-op."""
         victim = None
         with self._lock:
+            entry = self._by_session.get(id(session))
+            if entry is None or entry.refs <= 0:
+                return
+            entry.refs -= 1
             key = self._key(ep)
-            entry = self._sessions.get(key)
-            if entry is not None and entry[1] > 0:
-                entry[1] -= 1
-                if self._draining and entry[1] == 0:
-                    # close_all ran while this session was in use: the
-                    # last task off it completes the teardown
-                    victim = self._sessions.pop(key)[0]
+            retired = self._current.get(key) is not entry
+            if entry.refs == 0 and (entry.draining or retired
+                                    or entry.session.closed):
+                # last holder off a dead/draining/replaced generation
+                # completes its teardown — never under a live transfer
+                self._by_session.pop(id(session), None)
+                if not retired:
+                    del self._current[key]
+                victim = entry.session
         if victim is not None and not victim.closed:
             victim.connector.destroy(victim)
 
     @property
     def live_sessions(self) -> int:
         with self._lock:
-            return sum(1 for s, _ in self._sessions.values() if not s.closed)
+            return sum(1 for e in self._current.values()
+                       if not e.session.closed)
 
     def close_all(self) -> None:
-        """Destroy idle sessions now; in-use ones (refcount > 0) are
-        destroyed by their final ``release`` — never under a live
-        transfer, which would turn a shutdown into spurious
-        SessionClosed failures mid-stream."""
+        """Destroy the idle sessions now and mark the in-use ones
+        draining (their final ``release`` destroys them).  Only the
+        generations alive at this moment are affected: sessions started
+        afterwards pool normally again."""
+        victims = []
         with self._lock:
-            self._draining = True
-            victims = [key for key, entry in self._sessions.items()
-                       if entry[1] <= 0]
-            entries = [self._sessions.pop(key) for key in victims]
-        for session, _ in entries:
+            for key, entry in list(self._current.items()):
+                entry.draining = True
+                if entry.refs <= 0:
+                    del self._current[key]
+                    self._by_session.pop(id(entry.session), None)
+                    victims.append(entry.session)
+        for session in victims:
             if not session.closed:
                 session.connector.destroy(session)
 
@@ -143,6 +201,14 @@ class _Submission:
     #: a resume raced an in-flight pause: when the run loop drains with
     #: status PAUSED, re-queue instead of filing into the paused set
     resume_pending: bool = False
+    #: seq of this submission's live heap entry, or None when it holds
+    #: none (running / paused / cancelled).  A heap item is a tombstone
+    #: unless its seq matches — that is what lets pause/cancel dequeue
+    #: in O(1) and the scheduler pop lazily instead of re-sorting
+    queued_seq: int | None = None
+    #: which refit generation of the route model produced
+    #: ``predicted_seconds`` (0 = the seed fit, k = after the k-th refit)
+    predict_gen: int = 0
 
     @property
     def ep_ids(self) -> set[str]:
@@ -165,6 +231,16 @@ class ManagerMetrics:
     dispatches_by_tenant: dict = field(default_factory=dict)
     #: (tenant, task_id) in dispatch order — round-robin observability
     dispatch_log: list = field(default_factory=list)
+    #: route -> automatic refits performed by the online loop
+    refits: dict = field(default_factory=dict)
+    #: (route, predict_gen, predicted_s, actual_s) per successful routed
+    #: task, in completion order — the prediction-vs-actual error record
+    #: the refit loop is judged by.  A bounded ring, like the
+    #: observation history: a long-lived fleet must not grow it forever.
+    prediction_log: deque = field(
+        default_factory=lambda: deque(maxlen=ManagerMetrics.PREDICTION_LOG))
+
+    PREDICTION_LOG = 512
 
 
 # --------------------------------------------------------------------------
@@ -186,11 +262,18 @@ class TransferManager:
     def __init__(self, service: TransferService | None = None,
                  advisor: Advisor | None = None, max_workers: int = 4,
                  per_endpoint_cap: int | None = 2,
-                 share_sessions: bool = True, **service_kw):
+                 share_sessions: bool = True, refit_every: int = 8,
+                 history_limit: int = 64, **service_kw):
         self.service = service or TransferService(**service_kw)
         self.advisor = advisor
         self.max_workers = max(1, max_workers)
         self.per_endpoint_cap = per_endpoint_cap
+        #: auto-refit a route's perf model after this many successful
+        #: routed completions on it (0/None disables the online loop)
+        self.refit_every = refit_every
+        #: observations kept per route — a bounded ring, so refits track
+        #: recent traffic instead of averaging over the fleet's lifetime
+        self.history_limit = max(2, history_limit)
         self.sessions = SessionPool(self.service.creds) if share_sessions \
             else None
         self.metrics = ManagerMetrics()
@@ -203,9 +286,13 @@ class TransferManager:
         self._all: dict[str, _Submission] = {}
         self._active_eps: dict[str, int] = {}
         self._seq = itertools.count()
-        #: per-route (n_files, nbytes, model_seconds) from completed
-        #: tasks — the online-refit observation log
-        self._history: dict[str, list[tuple[int, int, float]]] = {}
+        #: per-route bounded ring of (n_files, nbytes, model_seconds)
+        #: from completed tasks — the online-refit observation log
+        self._history: dict[str, deque] = {}
+        #: per-route successful completions since the last refit
+        self._since_refit: dict[str, int] = {}
+        #: per-route refit generation (0 = seed model)
+        self._refit_gen: dict[str, int] = {}
         self._shutdown = False
 
     # ---- submission ------------------------------------------------------
@@ -223,8 +310,8 @@ class TransferManager:
         ``n_files``/``nbytes`` are workload hints for route prediction
         (estimated by expanding the source when omitted)."""
         if candidates:
-            src, dst, options, route_name, predicted = self._choose_route(
-                candidates, options, n_files, nbytes)
+            src, dst, options, route_name, predicted, (n_files, nbytes) = \
+                self._choose_route(candidates, options, n_files, nbytes)
         elif src is None or dst is None:
             raise ValueError("submit needs src+dst or candidates")
         else:
@@ -241,7 +328,8 @@ class TransferManager:
                 raise RuntimeError("manager is shut down")
             sub = _Submission(task, src, dst, options, tenant, priority,
                               next(self._seq), route_name=route_name,
-                              n_files_hint=n_files, nbytes_hint=nbytes)
+                              n_files_hint=n_files, nbytes_hint=nbytes,
+                              predict_gen=self._refit_gen.get(route_name, 0))
             self._enqueue_locked(sub)
             self.metrics.submitted += 1
         self._pump()
@@ -252,6 +340,7 @@ class TransferManager:
     def _enqueue_locked(self, sub: _Submission) -> None:
         heap = self._queues.setdefault(sub.tenant, [])
         heapq.heappush(heap, (sub.priority, sub.seq, sub))
+        sub.queued_seq = sub.seq
         if sub.tenant not in self._rr:
             self._rr.append(sub.tenant)
         self._queued[sub.task.task_id] = sub
@@ -283,15 +372,15 @@ class TransferManager:
                 workload = estimates[key]
             _, cc, predicted = Advisor([route]).best(*workload)
             if best is None or predicted < best[3]:
-                best = (cand, route, cc, predicted)
-        cand, route, cc, predicted = best
+                best = (cand, route, cc, predicted, workload)
+        cand, route, cc, predicted, workload = best
         # copy before tuning: the caller may share one TransferOptions
         # across submissions, and the advisor's knobs are per-task
         options = replace(options) if options is not None \
             else TransferOptions()
         options.concurrency = max(1, min(cc, route.max_concurrency))
         options.coalesce_threshold = self.advisor.coalesce_threshold(route)
-        return cand.src, cand.dst, options, route.name, predicted
+        return cand.src, cand.dst, options, route.name, predicted, workload
 
     def _estimate_workload(self, src: Endpoint) -> tuple[int, int]:
         """(n_files, nbytes) by expanding the source prefix — the same
@@ -300,7 +389,7 @@ class TransferManager:
         release = None
         if self.sessions is not None:
             session = self.sessions.acquire(src)
-            release = lambda: self.sessions.release(src)
+            release = lambda: self.sessions.release(src, session)
         else:
             session = src.connector.start(
                 self.service.creds.lookup(src.resolved_id()))
@@ -326,7 +415,14 @@ class TransferManager:
 
     def _pick_locked(self) -> _Submission | None:
         """Next runnable submission: tenants rotate round-robin; within
-        a tenant, lowest (priority, seq) whose endpoints are under cap."""
+        a tenant, lowest (priority, seq) whose endpoints are under cap.
+
+        The heaps use lazy deletion: pause/cancel (and a pick itself)
+        clear ``sub.queued_seq`` instead of scanning + re-heapifying, so
+        a pick is O(log n) pops — tombstones fall out here, and entries
+        popped while their endpoints were at cap are pushed back.  (The
+        old sorted(heap) + heap.remove + heapify pick was O(n log n)
+        each, O(n^2 log n) to drain a fleet-sized queue.)"""
         if len(self._running) >= self.max_workers:
             return None
         for _ in range(len(self._rr)):
@@ -335,12 +431,22 @@ class TransferManager:
             heap = self._queues.get(tenant)
             if not heap:
                 continue
-            for item in sorted(heap):
+            picked = None
+            deferred = []
+            while heap:
+                item = heapq.heappop(heap)
                 sub = item[2]
+                if sub.queued_seq != item[1]:
+                    continue  # tombstone: dequeued or re-queued since
                 if self._eligible_locked(sub):
-                    heap.remove(item)
-                    heapq.heapify(heap)
-                    return sub
+                    sub.queued_seq = None
+                    picked = sub
+                    break
+                deferred.append(item)  # at cap: stays queued
+            for item in deferred:
+                heapq.heappush(heap, item)
+            if picked is not None:
+                return picked
         return None
 
     def _activate_locked(self, sub: _Submission) -> None:
@@ -383,22 +489,29 @@ class TransferManager:
             try:
                 yield s_src, s_dst
             finally:
-                self.sessions.release(dst)
+                self.sessions.release(dst, s_dst)
         finally:
-            self.sessions.release(src)
+            self.sessions.release(src, s_src)
 
     def _run_one(self, sub: _Submission) -> None:
+        # per-task charge accounting: the run attributes every model-time
+        # charge (across all the threads it fans out into) to this task,
+        # so the delta is exact even with max_workers > 1 — concurrent
+        # tasks partition the shared clock instead of each observing all
+        # of it
         clock = self.service.clock
-        v0 = clock.virtual_elapsed
+        tid = sub.task.task_id
+        c0 = clock.charged(tid)
         scope = self._pooled_sessions if self.sessions is not None else None
         try:
             self.service._run(sub.task, sub.src, sub.dst, sub.options,
                               session_scope=scope)
         finally:
-            self._on_done(sub, clock.virtual_elapsed - v0)
+            self._on_done(sub, clock.charged(tid) - c0)
 
     def _on_done(self, sub: _Submission, model_seconds: float) -> None:
         task = sub.task
+        refit_due: str | None = None
         with self._lock:
             tid = task.task_id
             self._running.pop(tid, None)
@@ -424,17 +537,62 @@ class TransferManager:
                     self._paused[tid] = sub
             elif task.status == TransferTask.CANCELLED:
                 self.metrics.cancelled += 1
+                self.service.clock.forget(tid)
             else:
                 self.metrics.completed += 1
+                self.service.clock.forget(tid)
                 if task.status == TransferTask.SUCCEEDED and sub.route_name:
-                    # caveat: the virtual clock is shared, so concurrent
-                    # tasks inflate each other's reading; observations
-                    # are exact in the one-slot / sync setting the
-                    # refit loop uses
-                    self._history.setdefault(sub.route_name, []).append(
+                    route = sub.route_name
+                    self._history.setdefault(
+                        route, deque(maxlen=self.history_limit)).append(
                         (task.stats.files_total, task.stats.bytes_total,
                          task.stats.actual_model_seconds))
+                    self.metrics.prediction_log.append(
+                        (route, sub.predict_gen,
+                         task.stats.predicted_seconds,
+                         task.stats.actual_model_seconds))
+                    if self.refit_every:
+                        n = self._since_refit.get(route, 0) + 1
+                        if n >= self.refit_every:
+                            # reset under the lock: a sibling completion
+                            # must not schedule a second refit
+                            self._since_refit[route] = 0
+                            refit_due = route
+                        else:
+                            self._since_refit[route] = n
+        if refit_due is not None:
+            self._auto_refit(refit_due)
         self._pump()
+
+    def _auto_refit(self, route_name: str) -> None:
+        """One turn of the closed loop: refit the route from its recent
+        observations, then push the refreshed model's knobs into every
+        still-queued submission on that route so the in-flight fleet
+        converges without resubmission."""
+        model = self.refit_route(route_name)
+        with self._lock:
+            if model is None:
+                return
+            gen = self._refit_gen.get(route_name, 0) + 1
+            self._refit_gen[route_name] = gen
+            refits = self.metrics.refits
+            refits[route_name] = refits.get(route_name, 0) + 1
+            route = next((r for r in self.advisor.routes
+                          if r.name == route_name), None)
+            if route is None:
+                return
+            adv = Advisor([route])
+            threshold = self.advisor.coalesce_threshold(route)
+            for sub in self._queued.values():
+                if sub.route_name != route_name:
+                    continue
+                _, cc, predicted = adv.best(
+                    max(1, sub.n_files_hint), sub.nbytes_hint)
+                sub.options.concurrency = max(
+                    1, min(cc, route.max_concurrency))
+                sub.options.coalesce_threshold = threshold
+                sub.task.stats.predicted_seconds = predicted
+                sub.predict_gen = gen
 
     # ---- lifecycle -------------------------------------------------------
     def get(self, task_id: str) -> TransferTask:
@@ -447,7 +605,7 @@ class TransferManager:
         with self._lock:
             sub = self._queued.pop(task_id, None)
             if sub is not None:
-                self._remove_from_queue_locked(sub)
+                sub.queued_seq = None  # tombstone its heap entry
                 sub.task.status = TransferTask.PAUSED
                 self._paused[task_id] = sub
                 self.metrics.pauses += 1
@@ -488,26 +646,20 @@ class TransferManager:
             sub = self._queued.pop(task_id, None) \
                 or self._paused.pop(task_id, None)
             if sub is not None:
-                self._remove_from_queue_locked(sub)
+                sub.queued_seq = None  # tombstone its heap entry
                 sub.task.request_cancel()
                 self.service.markers.clear(task_id)
                 self.metrics.cancelled += 1
                 sub.task._finish(TransferTask.CANCELLED)
+                # a paused task may have accumulated charges in earlier
+                # runs; this is its terminal state, so drop its tally
+                self.service.clock.forget(task_id)
                 return True
             sub = self._running.get(task_id)
             if sub is not None:
                 sub.task.request_cancel()
                 return True
         return False
-
-    def _remove_from_queue_locked(self, sub: _Submission) -> None:
-        heap = self._queues.get(sub.tenant)
-        if heap:
-            for item in heap:
-                if item[2] is sub:
-                    heap.remove(item)
-                    heapq.heapify(heap)
-                    break
 
     def wait(self, task_id: str, timeout: float | None = None) -> bool:
         return self.service.get(task_id).wait(timeout)
@@ -544,6 +696,11 @@ class TransferManager:
             self.wait_all(timeout)
         with self._lock:
             self._shutdown = True
+            # backstop for tasks that never reached a terminal _on_done
+            # (left paused, still running at a no-wait shutdown): their
+            # charge tallies die with the fleet
+            for tid in self._all:
+                self.service.clock.forget(tid)
         if self.sessions is not None:
             self.sessions.close_all()
 
@@ -559,10 +716,34 @@ class TransferManager:
         with self._lock:
             return list(self._history.get(route_name, []))
 
+    def prediction_error(self, route_name: str | None = None,
+                         generation: int | None = None,
+                         min_generation: int | None = None) -> float | None:
+        """Median relative prediction error ``|predicted - actual| /
+        actual`` over the recorded prediction log, optionally filtered
+        by route and by refit generation (``generation=0`` is the seed
+        model; ``min_generation=1`` is everything predicted after at
+        least one online refit).  ``None`` when nothing matches — the
+        refit loop's convergence is judged by this shrinking."""
+        with self._lock:
+            rows = [(p, a) for r, g, p, a in self.metrics.prediction_log
+                    if (route_name is None or r == route_name)
+                    and (generation is None or g == generation)
+                    and (min_generation is None or g >= min_generation)]
+        if not rows:
+            return None
+        return statistics.median(
+            abs(p - a) / max(a, 1e-9) for p, a in rows)
+
     def refit_route(self, route_name: str, min_points: int = 3):
         """Refit one advisor route from recorded (n_files, seconds)
         observations — the paper's §5 regression, rerun on live traffic
-        instead of a benchmark sweep.  Returns the new
+        instead of a benchmark sweep.  Observations are charge-accounted
+        per task (see :meth:`_run_one`), so they are exact even when the
+        fleet recorded them with ``max_workers > 1``; the bounded
+        per-route ring (``history_limit``) ages stale traffic out.
+        Called automatically every ``refit_every`` completions per route,
+        and still callable on demand.  Returns the new
         :class:`~repro.core.perfmodel.PerfModel`, or ``None`` when there
         are too few (or degenerate) points."""
         if self.advisor is None:

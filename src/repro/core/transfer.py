@@ -49,7 +49,8 @@ from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
-from .clock import Clock, DEFAULT_CLOCK, Link, loopback
+from .clock import (Clock, DEFAULT_CLOCK, Link, bind_charge_owner, charge_to,
+                    loopback)
 from .connector import (AppChannel, ByteRange, Connector, Credential, Session,
                         iter_files)
 from .errors import (IntegrityError, PermanentError, TransientError,
@@ -770,10 +771,15 @@ class TransferService:
         task.files = []
         scope = session_scope or self._own_sessions
         try:
-            # third-party coordination / endpoint activation (§5.4)
-            self.clock.sleep(opt.startup_cost)
-            with scope(src, dst) as (s_src, s_dst):
-                self._execute(task, src, dst, s_src, s_dst, opt)
+            # all model time this run charges — control exchanges, link
+            # transmission, API admission, retry backoff, injected
+            # latency — is attributed to this task, across every thread
+            # the run fans out into (see clock.charge_to / bind_charge_owner)
+            with charge_to(task.task_id):
+                # third-party coordination / endpoint activation (§5.4)
+                self.clock.sleep(opt.startup_cost)
+                with scope(src, dst) as (s_src, s_dst):
+                    self._execute(task, src, dst, s_src, s_dst, opt)
         except Exception as e:
             task.log(f"FATAL {type(e).__name__}: {e}")
             task.stats.wall_seconds += time.monotonic() - t_start
@@ -909,7 +915,9 @@ class TransferService:
             tuner = threading.Thread(
                 target=self._tune, args=(task, task_target, opt, stop), daemon=True)
             tuner.start()
-        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+        # per-task worker threads inherit the run's charge owner
+        threads = [threading.Thread(target=bind_charge_owner(worker),
+                                    args=(i,), daemon=True)
                    for i in range(n_workers)]
         for t in threads:
             t.start()
@@ -999,7 +1007,8 @@ class TransferService:
                     for e in entries:
                         e.pipe.fail(exc)
 
-            sender = threading.Thread(target=do_send, daemon=True)
+            sender = threading.Thread(target=bind_charge_owner(do_send),
+                                      daemon=True)
             sender.start()
             try:
                 dst.connector.recv_batch(s_dst, [e.dpath for e in entries],
@@ -1204,7 +1213,8 @@ class TransferService:
                 send_err.append(e)
                 pipe.fail(e)
 
-        sender = threading.Thread(target=do_send, daemon=True)
+        sender = threading.Thread(target=bind_charge_owner(do_send),
+                                  daemon=True)
         sender.start()
         recv_err: Exception | None = None
         try:

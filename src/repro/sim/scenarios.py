@@ -34,8 +34,8 @@ from typing import Callable
 from ..connectors import (MemoryConnector, ObjectStoreConnector,
                           PosixConnector, make_cloud)
 from ..connectors.faultproxy import FaultProxyConnector
-from ..core import (Credential, CredentialStore, Endpoint, TransferManager,
-                    TransferOptions, TransferService)
+from ..core import (Credential, CredentialStore, Endpoint, RouteCandidate,
+                    TransferManager, TransferOptions, TransferService)
 from ..core.clock import Clock
 from ..core.faults import FaultSchedule
 
@@ -364,6 +364,7 @@ class ScenarioRunner:
                   per_endpoint_cap: int | None = 2,
                   pause_resume=(), seed: int = 0,
                   timeout: float = 240.0,
+                  advisor=None, refit_every: int = 4,
                   strict: bool = False) -> "MultiScenarioResult":
         """Run ``n_tasks`` concurrent transfers through ONE
         :class:`TransferManager` sharing one route's endpoints.
@@ -377,7 +378,16 @@ class ScenarioRunner:
         while queued) and then resume before the final wait.  Per-task
         end-state invariants are checked exactly as in :meth:`run`,
         plus manager-level ones: worker budget and per-endpoint caps
-        never exceeded, and the whole fleet finishes."""
+        never exceeded, and the whole fleet finishes.
+
+        With ``advisor`` given, every submission is routed through its
+        first route (per-task workload hints from the generated trees)
+        and the manager's online refit loop runs every ``refit_every``
+        completions.  One more invariant then applies: once at least one
+        refit fired, the median prediction error of post-refit tasks
+        must be *smaller* than the seed model's — charge-accounted
+        observations under multi-tenant chaos traffic must converge the
+        model, not corrupt it."""
         with self._lock:
             self._n += 1
             run_dir = os.path.join(self.base_dir, f"multi{self._n:03d}")
@@ -421,7 +431,8 @@ class ScenarioRunner:
                 {"identity": tenant}))
         manager = TransferManager(
             max_workers=max_workers, per_endpoint_cap=per_endpoint_cap,
-            credential_store=creds,
+            credential_store=creds, advisor=advisor,
+            refit_every=refit_every,
             marker_root=os.path.join(run_dir, "markers"), clock=self.clock)
 
         options = options or TransferOptions(
@@ -429,10 +440,19 @@ class ScenarioRunner:
         tasks = []
         for i in range(n_tasks):
             tenant = tenants[i % len(tenants)]
-            tasks.append(manager.submit(
-                Endpoint(src_conn, f"{SRC_ROOT}/t{i}", f"src-{tenant}"),
-                Endpoint(dst_conn, f"{DST_ROOT}/t{i}", f"dst-{tenant}"),
-                options, task_id=f"multi-{self._n:03d}-t{i}"))
+            src_ep = Endpoint(src_conn, f"{SRC_ROOT}/t{i}", f"src-{tenant}")
+            dst_ep = Endpoint(dst_conn, f"{DST_ROOT}/t{i}", f"dst-{tenant}")
+            if advisor is not None:
+                tasks.append(manager.submit(
+                    candidates=[RouteCandidate(advisor.routes[0].name,
+                                               src_ep, dst_ep)],
+                    options=options, task_id=f"multi-{self._n:03d}-t{i}",
+                    n_files=len(per_task_files[i]),
+                    nbytes=sum(len(d) for d in per_task_files[i].values())))
+            else:
+                tasks.append(manager.submit(
+                    src_ep, dst_ep, options,
+                    task_id=f"multi-{self._n:03d}-t{i}"))
 
         for i in pause_resume:
             manager.pause(tasks[i].task_id)
@@ -474,6 +494,15 @@ class ScenarioRunner:
                 if peak > per_endpoint_cap:
                     violations.append(f"endpoint cap exceeded on {ep_id}: "
                                       f"{peak} > {per_endpoint_cap}")
+        if advisor is not None and m.refits:
+            # refit convergence: once the online loop has fired, tasks
+            # predicted by a refit model must beat the seed model
+            pre = manager.prediction_error(generation=0)
+            post = manager.prediction_error(min_generation=1)
+            if pre is not None and post is not None and post >= pre:
+                violations.append(
+                    f"refit did not converge: median prediction error "
+                    f"{post:.3f} after refit >= {pre:.3f} before")
         manager.shutdown(wait=False)
         result = MultiScenarioResult(results=results, manager=manager,
                                      violations=violations)

@@ -5,6 +5,7 @@ orchestrator, scaled out)."""
 
 import os
 import threading
+import time
 
 import pytest
 
@@ -452,6 +453,349 @@ def test_unknown_candidate_route_raises(tmp_path):
     with pytest.raises(ValueError):
         mgr.submit()  # neither src/dst nor candidates
     mgr.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# per-task model-time attribution (the shared-clock skew fix)
+# --------------------------------------------------------------------------
+def test_concurrent_tasks_model_time_not_inflated(tmp_path):
+    """With max_workers >= 4 and overlapping tasks, each task's
+    ``actual_model_seconds`` is exactly its OWN charges — a concurrent
+    task's latency never inflates it — and the per-route observations
+    carry those exact values."""
+    n = 4
+    latch_n = [0]
+    latch = threading.Event()
+    lock = threading.Lock()
+
+    class LatchMemory(MemoryConnector):
+        """First recv of every task blocks until all n tasks are
+        mid-flight, so the tasks genuinely overlap."""
+
+        def recv(self, session, path, channel):
+            with lock:
+                latch_n[0] += 1
+                if latch_n[0] >= n:
+                    latch.set()
+            assert latch.wait(30), "fleet never overlapped"
+            return super().recv(session, path, channel)
+
+    dst = LatchMemory()
+    # t0=0: per-file path (coalesce threshold 0) and cc=1 from the ladder
+    advisor = Advisor([Route("r", _mk_model("r", t0=0.0, R=1e12),
+                             max_concurrency=1)])
+    mgr = make_manager(tmp_path, advisor=advisor, max_workers=n,
+                       per_endpoint_cap=None, refit_every=0)
+    clock = mgr.service.clock
+    tasks, expected = [], []
+    for i in range(n):
+        n_files = i + 2
+        files = {f"d/f{j}.bin": os.urandom(1024) for j in range(n_files)}
+        src = seeded_posix(os.path.join(str(tmp_path), f"s{i}"), files)
+        opts = TransferOptions(startup_cost=0.5 * (i + 1),
+                               file_pipeline_cost=0.125, parallelism=1)
+        tasks.append(mgr.submit(
+            candidates=[RouteCandidate("r", Endpoint(src, "d"),
+                                       Endpoint(dst, f"out{i}"))],
+            options=opts, task_id=f"attr{i}",
+            n_files=n_files, nbytes=n_files * 1024))
+        # posix->memory over loopback charges exactly startup + one
+        # pipelined control exchange per file — nothing else
+        expected.append(0.5 * (i + 1) + 0.125 * n_files)
+    assert mgr.wait_all(timeout=60)
+    for i, task in enumerate(tasks):
+        assert task.status == task.SUCCEEDED, task.events[-3:]
+        assert task.stats.actual_model_seconds == \
+            pytest.approx(expected[i], abs=1e-9), \
+            f"task {i}: cross-task inflation"
+    # the four tasks PARTITION the shared clock: their charges sum to
+    # (not each observe) the total modeled time
+    assert sum(t.stats.actual_model_seconds for t in tasks) == \
+        pytest.approx(clock.virtual_elapsed, abs=1e-9)
+    obs = {nf: sec for nf, _, sec in mgr.observations("r")}
+    for i, task in enumerate(tasks):
+        assert obs[i + 2] == pytest.approx(expected[i], abs=1e-9)
+    mgr.shutdown()
+
+
+def test_auto_refit_loop_converges_and_retunes_queued(tmp_path):
+    """The closed loop: a deliberately miscalibrated seed model is refit
+    automatically every ``refit_every`` completions, still-queued
+    submissions pick up the refreshed knobs + prediction, and post-refit
+    median prediction error collapses."""
+    dst = MemoryConnector()
+    # seed model is ~1000x off: t0=5 s/file when the true per-file cost
+    # is the 5 ms pipelined exchange
+    advisor = Advisor([Route("r", _mk_model("r", t0=5.0, R=1e12),
+                             max_concurrency=1)])
+    mgr = make_manager(tmp_path, advisor=advisor, max_workers=1,
+                       per_endpoint_cap=None, refit_every=3)
+    tasks = []
+    seed_predictions = {}
+    for i in range(6):
+        n_files = 2 + 2 * (i % 3)
+        files = {f"d/f{j}.bin": os.urandom(512) for j in range(n_files)}
+        src = seeded_posix(os.path.join(str(tmp_path), f"s{i}"), files)
+        t = mgr.submit(
+            candidates=[RouteCandidate("r", Endpoint(src, "d"),
+                                       Endpoint(dst, f"out{i}"))],
+            options=TransferOptions(startup_cost=0.01),
+            task_id=f"refit{i}", n_files=n_files, nbytes=n_files * 512)
+        seed_predictions[t.task_id] = t.stats.predicted_seconds
+        tasks.append(t)
+    assert mgr.wait_all(timeout=60)
+    for t in tasks:
+        assert t.status == t.SUCCEEDED, t.events[-3:]
+    assert mgr.metrics.refits.get("r", 0) >= 1
+    # queued submissions were re-predicted by the refreshed model
+    gens = [g for _, g, _, _ in mgr.metrics.prediction_log]
+    assert 0 in gens and max(gens) >= 1
+    retuned = [t for t in tasks
+               if t.stats.predicted_seconds != seed_predictions[t.task_id]]
+    assert retuned, "no queued submission picked up the refit model"
+    pre = mgr.prediction_error(generation=0)
+    post = mgr.prediction_error(min_generation=1)
+    assert post < pre, (pre, post)
+    # the seed model was off by orders of magnitude; the refit one must
+    # actually predict (not just improve)
+    assert post < 1.0
+    mgr.shutdown()
+
+
+def test_observation_history_is_bounded(tmp_path):
+    """Stale observations age out: the per-route ring keeps only the
+    most recent ``history_limit`` points."""
+    dst = MemoryConnector()
+    advisor = Advisor([Route("r", _mk_model("r", t0=0.0, R=1e12),
+                             max_concurrency=1)])
+    mgr = make_manager(tmp_path, advisor=advisor, max_workers=1,
+                       refit_every=0, history_limit=4)
+    files = {"d/f.bin": os.urandom(256)}
+    src = seeded_posix(tmp_path, files)
+    for i in range(7):
+        mgr.submit(candidates=[RouteCandidate(
+            "r", Endpoint(src, "d"), Endpoint(dst, f"o{i}"))],
+            options=TransferOptions(startup_cost=0.1 * (i + 1)),
+            task_id=f"h{i}", n_files=1, nbytes=256, sync=True)
+    obs = mgr.observations("r")
+    assert len(obs) == 4
+    # the survivors are the most recent four (largest startup charges)
+    assert [round(sec, 6) for _, _, sec in obs] == \
+        [round(0.1 * (i + 1) + 0.005, 6) for i in range(3, 7)]
+    mgr.shutdown()
+
+
+def test_refit_convergence_under_multitenant_chaos(tmp_path):
+    """Acceptance: a multi-tenant fleet under fault injection still
+    shrinks its median prediction error once the online refit loop has
+    fired (run_multi's convergence invariant, strict)."""
+    runner = ScenarioRunner(str(tmp_path), clock=Clock(scale=0.0))
+    advisor = Advisor([Route("fleet", _mk_model("fleet", t0=3.0, R=1e9),
+                             max_concurrency=1)])
+    schedule = (FaultSchedule(seed=5)
+                .transient(op="read", at=4, times=2)
+                .latency(op="stat", delay=0.05, times=3))
+    res = runner.run_multi(n_tasks=10, tenants=("alice", "bob", "carol"),
+                           trees=("mixed", "many-small"),
+                           route="posix->memory", schedule=schedule,
+                           max_workers=3, per_endpoint_cap=None,
+                           advisor=advisor, refit_every=3, seed=3,
+                           strict=True)
+    assert res.ok
+    mgr = res.manager
+    assert mgr.metrics.refits.get("fleet", 0) >= 1
+    assert mgr.prediction_error(min_generation=1) < \
+        mgr.prediction_error(generation=0)
+
+
+# --------------------------------------------------------------------------
+# scheduler races
+# --------------------------------------------------------------------------
+def test_cancel_while_queued_races_pump(tmp_path):
+    """Cancels fired from other threads while _pump is dispatching:
+    every task drains to a terminal state, the queue empties, and the
+    accounting adds up — no wedge, no double-dispatch."""
+    files = {"d/f.bin": os.urandom(4 * 1024)}
+    src = seeded_posix(tmp_path, files)
+    dst = MemoryConnector()
+    mgr = make_manager(tmp_path, max_workers=2, per_endpoint_cap=None)
+
+    gate = threading.Event()
+
+    class Gated(PosixConnector):
+        def send(self, session, path, channel):
+            gate.wait(timeout=30)
+            return super().send(session, path, channel)
+
+    gated = Gated(src.root)
+    opts = TransferOptions(startup_cost=0.0)
+    n = 24
+    tasks = [mgr.submit(Endpoint(gated, "d"), Endpoint(dst, f"o{i}"),
+                        opts, task_id=f"c{i}") for i in range(n)]
+    doomed = [f"c{i}" for i in range(0, n, 3)]
+
+    def chop():
+        for tid in doomed:
+            mgr.cancel(tid)
+
+    cancellers = [threading.Thread(target=chop) for _ in range(3)]
+    for t in cancellers:
+        t.start()
+    gate.set()  # open the flood while cancels are in flight
+    for t in cancellers:
+        t.join()
+    assert mgr.wait_all(timeout=120)
+    counts = mgr.counts()
+    assert counts["queued"] == 0 and counts["running"] == 0
+    for task in tasks:
+        assert task.status in (task.SUCCEEDED, task.CANCELLED), task.status
+    m = mgr.metrics
+    assert m.completed + m.cancelled == n
+    # a task cancelled while queued must never have been dispatched
+    dispatched = {tid for _, tid in m.dispatch_log}
+    for task in tasks:
+        if task.status == task.CANCELLED and task.task_id not in dispatched:
+            assert task.stats.bytes_done == 0
+    mgr.shutdown()
+
+
+def test_resume_pending_cycles_under_concurrent_pump(tmp_path):
+    """Repeated pause->immediate-resume cycles against a running fleet
+    (so _pump is constantly re-entered) always drain to completion,
+    byte-exact."""
+    payload = {f"d/f{i}.bin": os.urandom(64 * 1024) for i in range(8)}
+    src = seeded_posix(tmp_path, payload)
+    dst = MemoryConnector()
+
+    class Dawdling(PosixConnector):
+        def send(self, session, path, channel):
+            time.sleep(0.002)  # a window for pause to land mid-run
+            return super().send(session, path, channel)
+
+    slow = Dawdling(src.root)
+    mgr = make_manager(tmp_path, max_workers=3, per_endpoint_cap=None)
+    opts = TransferOptions(startup_cost=0.0, concurrency=2,
+                           coalesce_threshold=0)
+    main = mgr.submit(Endpoint(slow, "d"), Endpoint(dst, "main"), opts,
+                      task_id="main")
+    noise = [mgr.submit(Endpoint(slow, "d"), Endpoint(dst, f"n{i}"), opts,
+                        task_id=f"n{i}") for i in range(4)]
+    for _ in range(5):
+        mgr.pause("main")
+        mgr.resume("main")  # may race the drain -> resume_pending path
+        time.sleep(0.005)
+    # a final resume in case the last pause landed after its resume
+    main.wait_idle(60)
+    mgr.resume("main")
+    assert mgr.wait_all(timeout=120)
+    assert main.status == main.SUCCEEDED, main.events[-5:]
+    for t in noise:
+        assert t.status == t.SUCCEEDED
+    dst.start(None)
+    for name, data in payload.items():
+        assert dst.store.get("main/" + name[len("d/"):]) == data
+    mgr.shutdown()
+
+
+# --------------------------------------------------------------------------
+# session pool generations
+# --------------------------------------------------------------------------
+def test_session_pool_stale_release_is_noop(tmp_path):
+    """A holder of a dead session releasing after the pool replaced it
+    must not touch the replacement's refcount or destroy it."""
+    from repro.core import SessionPool
+    conn = MemoryConnector()
+    creds = CredentialStore()
+    pool = SessionPool(creds)
+    ep = Endpoint(conn, "a", "ep")
+    s1 = pool.acquire(ep)
+    # the provider drops the session mid-task
+    conn.destroy(s1)
+    assert s1.closed
+    # next task replaces the generation
+    s2 = pool.acquire(ep)
+    assert s2 is not s1 and not s2.closed
+    # the stale holder's release is a no-op against the new generation
+    pool.release(ep, s1)
+    assert not s2.closed
+    assert pool.live_sessions == 1
+    # and a second stale release cannot drive anything negative / kill s2
+    pool.release(ep, s1)
+    pool.release(ep, s2)
+    assert not s2.closed  # refcount 0: stays warm, not destroyed
+    assert pool.live_sessions == 1
+    pool.close_all()
+    assert s2.closed
+
+
+def test_session_pool_usable_after_close_all(tmp_path):
+    """close_all retires the current generations only: the pool keeps
+    sessions warm for work that starts afterwards instead of destroying
+    every future session at refcount zero."""
+    from repro.core import SessionPool
+    conn = MemoryConnector()
+    pool = SessionPool(CredentialStore())
+    ep = Endpoint(conn, "a", "ep")
+    s1 = pool.acquire(ep)
+    pool.release(ep, s1)
+    pool.close_all()
+    assert s1.closed and pool.live_sessions == 0
+    # the pool drained once; it must still pool (keep warm) afterwards
+    s2 = pool.acquire(ep)
+    pool.release(ep, s2)
+    assert not s2.closed
+    assert pool.live_sessions == 1
+    s3 = pool.acquire(ep)
+    assert s3 is s2  # warm reuse, not a fresh start
+    pool.release(ep, s3)
+    pool.close_all()
+    assert s2.closed
+
+
+def test_session_drop_mid_task_spares_replacement(tmp_path):
+    """A chaos session drop mid-task (via FaultProxyConnector) closes
+    the shared session; the victim task's stale release must not tear
+    down the replacement the rest of the fleet is using."""
+    from repro.connectors.faultproxy import FaultProxyConnector
+    from repro.core.errors import SessionClosed
+
+    files = {f"d/f{i}.bin": os.urandom(16 * 1024) for i in range(3)}
+    src = seeded_posix(tmp_path, files)
+
+    class DroppingProxy(FaultProxyConnector):
+        """An injected drop also closes the live session, the way a real
+        transport teardown would."""
+
+        def recv(self, session, path, channel):
+            try:
+                return super().recv(session, path, channel)
+            except SessionClosed:
+                session.closed = True
+                raise
+
+    schedule = FaultSchedule(seed=1).session_drop(op="recv", at=1, times=1,
+                                                  scope="global")
+    dst = DroppingProxy(MemoryConnector(), schedule,
+                        clock=Clock(scale=0.0))
+    mgr = make_manager(tmp_path, max_workers=1)
+    opts = TransferOptions(startup_cost=0.0, coalesce_threshold=0,
+                           concurrency=1)
+    victim = mgr.submit(Endpoint(src, "d"), Endpoint(dst, "v", "dst-ep"),
+                        opts, task_id="victim")
+    assert victim.wait(60)
+    assert victim.status == victim.FAILED  # SessionClosed is permanent
+    # the fleet keeps going on a fresh generation
+    healthy = mgr.submit(Endpoint(src, "d"), Endpoint(dst, "h", "dst-ep"),
+                         opts, task_id="healthy", sync=True)
+    assert healthy.status == healthy.SUCCEEDED, healthy.events[-5:]
+    inner = dst.inner
+    inner.start(None)
+    assert inner.store.get("h/f0.bin") == files["d/f0.bin"]
+    # all references drained; the replacement session is alive and warm
+    assert all(e.refs == 0 for e in mgr.sessions._by_session.values())
+    assert mgr.sessions.live_sessions == 2  # src + replacement dst
+    mgr.shutdown()
+    assert mgr.sessions.live_sessions == 0
 
 
 def test_degenerate_service_submit_is_managed(tmp_path):
