@@ -1,0 +1,223 @@
+"""Federation-plane benchmarks: fleet goodput vs site count, and the
+control-plane cost of moving a live task between sites.
+
+The paper's third-party orchestrator earns horizontal scale by adding
+*control planes*, not data movers; this bench drives a
+:class:`~repro.fed.FederatedCoordinator` over 1..N sites (each with its
+own worker budget and its own drive-profile destination endpoint) and
+reports:
+
+* ``fed.fleet.sNN`` — aggregate goodput as sites are added: each site
+  brings workers and endpoints, so goodput should scale with the site
+  count until the shared source saturates;
+* ``fed.handoff.latency`` — wall-clock cost of a full handoff
+  (export + JSON round-trip + import) of a paused mid-flight task,
+  measured on the control plane only;
+* ``fed.handoff.bytes_saved`` — the fraction of the task the traveled
+  hole map spares the new site from re-sending;
+* ``fed.spec.roundtrip`` — TransferSpec JSON serialize+parse cost (the
+  per-submission wire tax).
+
+Every run ends with ``assert_third_party()``: if the coordinator ever
+charged model time, the suite fails.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.connectors import ObjectStoreConnector, PosixConnector, make_cloud
+from repro.core import (Credential, CredentialStore, TransferManager,
+                        TransferOptions)
+from repro.core.clock import Clock
+from repro.fed import FederatedCoordinator, TransferSpec
+from repro.sim.scenarios import _HoldSrc
+
+from .common import MB, QUICK, emit, split_dataset
+
+SITE_COUNTS = (1, 2) if QUICK else (1, 2, 4)
+TASKS_PER_SITE = 2 if QUICK else 4
+FILES_PER_TASK = 6 if QUICK else 12
+FILE_KB = 16
+WORKERS_PER_SITE = 3
+BENCH_SCALE = 0.1  # see bench_manager: latency-dominated, overlap-visible
+PROVIDER = "drive"
+OVERRIDES = {"quota_rate": 10_000, "quota_burst": 100_000,
+             "consistency_delay": 0.0}
+KB = 1024
+
+
+def _build_federation(tmp: str, clock: Clock, n_sites: int,
+                      src_factory=None):
+    """One coordinator over ``n_sites`` sites: site ``i`` owns its own
+    posix source root and its own emulated cloud destination."""
+    coord = FederatedCoordinator(placement="owner")
+    endpoints = {}
+    src_conns = []
+    for i in range(n_sites):
+        src_conn = PosixConnector(os.path.join(tmp, f"site{i}"))
+        if src_factory is not None:
+            src_conn = src_factory(i, src_conn)
+        storage = make_cloud(PROVIDER, clock=clock, **OVERRIDES)
+        dst_conn = ObjectStoreConnector(storage, placement="local",
+                                        clock=clock)
+        endpoints[f"src-s{i}"] = src_conn
+        endpoints[f"dst-s{i}"] = dst_conn
+        src_conns.append(src_conn)
+    for i in range(n_sites):
+        creds = CredentialStore()
+        for k in range(n_sites):
+            creds.register(f"dst-s{k}", Credential(
+                endpoints[f"dst-s{k}"].credential_scheme, {}))
+        mgr = TransferManager(
+            max_workers=WORKERS_PER_SITE, per_endpoint_cap=None,
+            credential_store=creds,
+            marker_root=os.path.join(tmp, f"markers{i}"), clock=clock)
+        coord.register_site(f"s{i}", mgr, endpoints,
+                            owns={f"src-s{i}", f"dst-s{i}"})
+    return coord, src_conns
+
+
+def _seed_task_files(tmp: str, site: int, name: str,
+                     parts: list[bytes]) -> None:
+    root = os.path.join(tmp, f"site{site}", name)
+    os.makedirs(root, exist_ok=True)
+    for i, part in enumerate(parts):
+        with open(os.path.join(root, f"f{i:04d}.bin"), "wb") as f:
+            f.write(part)
+
+
+def bench_goodput() -> dict:
+    out = {}
+    per_task_bytes = FILES_PER_TASK * FILE_KB * 1024
+    parts = split_dataset(per_task_bytes, FILES_PER_TASK)
+    opts = TransferOptions(concurrency=2, startup_cost=0.0,
+                           coalesce_threshold=0)
+    for n_sites in SITE_COUNTS:
+        with tempfile.TemporaryDirectory() as tmp:
+            clock = Clock(scale=BENCH_SCALE)
+            coord, _ = _build_federation(tmp, clock, n_sites)
+            n_tasks = TASKS_PER_SITE * n_sites
+            specs = []
+            for j in range(n_tasks):
+                site = j % n_sites
+                _seed_task_files(tmp, site, f"fleet{j}", parts)
+                specs.append(TransferSpec.new(
+                    f"fed-{n_sites}-{j}", f"src-s{site}", f"fleet{j}",
+                    f"dst-s{site}", f"bkt/fleet{j}",
+                    tenant=("alice", "bob")[j % 2], options=opts,
+                    n_files=FILES_PER_TASK, nbytes=per_task_bytes))
+            t0 = time.monotonic()
+            tasks = [coord.submit(spec.to_json()) for spec in specs]
+            ok = coord.wait_all(timeout=600)
+            makespan = (time.monotonic() - t0) / BENCH_SCALE
+            assert ok, "federated fleet did not finish"
+            for t in tasks:
+                assert t.status == t.SUCCEEDED, t.events[-3:]
+            coord.assert_third_party()
+            goodput = n_tasks * per_task_bytes / max(makespan, 1e-9) / MB
+            out[n_sites] = {"model_s": makespan,
+                            "goodput_mb_s": goodput}
+            emit(f"fed.fleet.s{n_sites:02d}", makespan,
+                 f"goodput={goodput:.1f}MB/s tasks={n_tasks} "
+                 f"workers/site={WORKERS_PER_SITE}")
+            coord.shutdown(wait=False)
+    base = out[SITE_COUNTS[0]]["goodput_mb_s"]
+    top = out[SITE_COUNTS[-1]]["goodput_mb_s"]
+    emit("fed.fleet.scaling", 0.0,
+         f"x{top / max(base, 1e-9):.2f} goodput at "
+         f"{SITE_COUNTS[-1]} sites")
+    return out
+
+
+def bench_handoff() -> dict:
+    """Full handoff of a paused mid-flight task: pause+drain excluded
+    (data-plane dependent), export -> JSON -> import measured as the
+    pure control-plane hop."""
+    with tempfile.TemporaryDirectory() as tmp:
+        clock = Clock(scale=0.0)
+        holds = {}
+
+        def src_factory(i, conn):
+            holds[i] = _HoldSrc(conn)
+            return holds[i]
+
+        coord, src_conns = _build_federation(tmp, clock, 2,
+                                             src_factory=src_factory)
+        task_bytes = 4 * MB
+        parts = split_dataset(task_bytes, 8)
+        _seed_task_files(tmp, 0, "hand0", parts)
+        holds[0].arm_hold(["hand0"], 1 * MB)
+        spec = TransferSpec.new(
+            "handoff-0", "src-s0", "hand0", "dst-s0", "bkt/hand0",
+            tenant="alice",
+            options=TransferOptions(concurrency=1, startup_cost=0.0,
+                                    coalesce_threshold=0,
+                                    blocksize=256 * KB),
+            n_files=8, nbytes=task_bytes)
+        task = coord.submit(spec.to_json())
+        assert holds[0].engaged.wait(30), "hold never engaged"
+        site_a = coord.sites()["s0"]
+        site_a.manager.pause("handoff-0")
+        holds[0].release()
+        deadline = time.monotonic() + 30
+        payload = None
+        while payload is None and time.monotonic() < deadline:
+            task.wait_idle(0.05)
+            payload = site_a.manager.export_state("handoff-0")
+        assert payload is not None, "task never drained to exportable"
+
+        # the measured hop: serialize -> wire -> parse -> adopt
+        t0 = time.perf_counter()
+        traveled = TransferSpec.from_json(
+            TransferSpec.from_payload(payload).to_json())
+        site_b = coord.sites()["s1"]
+        src, dst = site_b.endpoint_pair(traveled)
+        task_b = site_b.manager.import_state(traveled.to_payload(),
+                                             src, dst)
+        dt = time.perf_counter() - t0
+        assert task_b.wait(60)
+        assert task_b.status == task_b.SUCCEEDED, task_b.events[-3:]
+        saved = traveled.done_bytes() / task_bytes
+        coord.assert_third_party()
+        emit("fed.handoff.latency", dt,
+             f"wall_ms={dt * 1e3:.2f} marker_files="
+             f"{len(traveled.markers['files'])}")
+        emit("fed.handoff.bytes_saved", 0.0,
+             f"{saved:.2%} of {task_bytes // MB}MB not re-sent "
+             f"({traveled.done_bytes()} bytes traveled as done)")
+        coord.shutdown(wait=False)
+        return {"latency_s": dt, "bytes_saved_frac": saved}
+
+
+def bench_spec_roundtrip() -> dict:
+    n = 200 if QUICK else 1000
+    markers = {"files": {
+        f"data/f{i:03d}.bin": {
+            "done": [[0, 65536], [131072, 65536]], "complete": False,
+            "digests": {"0:65536": "ab" * 32, "131072:65536": "cd" * 32}}
+        for i in range(16)}}
+    spec = TransferSpec.new(
+        "rt-0", "src-s0", "data", "dst-s0", "out", tenant="alice",
+        options=TransferOptions(), n_files=16, nbytes=16 * MB)
+    spec.state = "paused"
+    spec.markers = markers
+    t0 = time.perf_counter()
+    for _ in range(n):
+        spec = TransferSpec.from_json(spec.to_json())
+    dt = (time.perf_counter() - t0) / n
+    emit("fed.spec.roundtrip", dt,
+         f"us={dt * 1e6:.0f} wire_bytes={len(spec.to_json())}")
+    return {"roundtrip_s": dt}
+
+
+def run() -> dict:
+    return {"goodput": bench_goodput(), "handoff": bench_handoff(),
+            "spec": bench_spec_roundtrip()}
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -13,11 +13,29 @@ per-file-overhead trajectory is tracked across PRs.
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
 import sys
 import time
 import traceback
+
+#: THE suite registry: name -> (module under benchmarks/, one-line why).
+#: The CLI help, unknown-suite guard, and default run order all derive
+#: from this — adding a bench here is the whole registration.
+SUITES: dict[str, tuple[str, str]] = {
+    "perfile": ("bench_perfile", "Figs 6-11 + Table 1"),
+    "startup": ("bench_startup", "Fig 12 (Eq. 6)"),
+    "throughput": ("bench_throughput", "Figs 13-16"),
+    "intercloud": ("bench_intercloud", "Figs 17-18"),
+    "integrity": ("bench_integrity", "Figs 19-21"),
+    "chaos": ("bench_chaos", "goodput vs fault rate"),
+    "manager": ("bench_manager", "fleet goodput + fairness + refit"),
+    "federation": ("bench_federation", "multi-site goodput + handoff"),
+    "ckpt": ("bench_ckpt", "framework: §8 coalescing"),
+    "data": ("bench_data", "framework: ingest"),
+    "kernels": ("bench_kernels", "framework: pallas kernels"),
+}
 
 
 def _write_perfile_json(models: dict, path: str = "BENCH_perfile.json") -> None:
@@ -48,42 +66,28 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small N / fewer providers")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: perfile,startup,"
-                         "throughput,integrity,intercloud,chaos,ckpt,"
-                         "data,kernels")
+                    help="comma-separated subset: " + ",".join(SUITES))
     args = ap.parse_args()
+    wanted = (args.only.split(",") if args.only else list(SUITES))
+    unknown = [name for name in wanted if name not in SUITES]
+    if unknown:
+        print(f"# unknown suite(s): {','.join(unknown)} "
+              f"(known: {','.join(SUITES)})", file=sys.stderr)
+        sys.exit(2)
     if args.quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"
 
-    # import AFTER the env flag so common.py picks it up
-    from . import (bench_chaos, bench_ckpt, bench_data, bench_integrity,
-                   bench_intercloud, bench_kernels, bench_manager,
-                   bench_perfile, bench_startup, bench_throughput)
-
-    suites = {
-        "perfile": bench_perfile.run,        # Figs 6-11 + Table 1
-        "startup": bench_startup.run,        # Fig 12 (Eq. 6)
-        "throughput": bench_throughput.run,  # Figs 13-16
-        "intercloud": bench_intercloud.run,  # Figs 17-18
-        "integrity": bench_integrity.run,    # Figs 19-21
-        "chaos": bench_chaos.run,            # goodput vs fault rate
-        "manager": bench_manager.run,        # fleet goodput + fairness
-        "ckpt": bench_ckpt.run,              # framework: §8 coalescing
-        "data": bench_data.run,              # framework: ingest
-        "kernels": bench_kernels.run,        # framework: pallas kernels
-    }
-    wanted = (args.only.split(",") if args.only else list(suites))
-    unknown = [name for name in wanted if name not in suites]
-    if unknown:
-        print(f"# unknown suite(s): {','.join(unknown)}", file=sys.stderr)
-        sys.exit(2)
     print("name,us_per_call,derived")
     t0 = time.monotonic()
     failed: list[str] = []
     for name in wanted:
-        print(f"# --- {name} ---", file=sys.stderr)
+        module_name, why = SUITES[name]
+        print(f"# --- {name} ({why}) ---", file=sys.stderr)
         try:
-            result = suites[name]()
+            # import AFTER the env flag so common.py picks QUICK up
+            module = importlib.import_module(f".{module_name}",
+                                             package=__package__)
+            result = module.run()
         except Exception:
             # a broken benchmark must fail the scripted run (CI gates on
             # the exit code), not scroll past as a stack trace

@@ -10,7 +10,8 @@ pushing:
 Lanes:
   hygiene  fail on tracked bytecode artifacts (__pycache__ / *.pyc)
   compile  byte-compile src/benchmarks/examples/scripts/tests
-  tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow"
+  fed      PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
+  tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow and not fed"
   chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
   bench    PYTHONPATH=src python -m benchmarks.run --quick
 """
@@ -38,8 +39,12 @@ LANES: dict[str, list[str]] = {
     "hygiene": [sys.executable, "-c", _HYGIENE_SNIPPET],
     "compile": [sys.executable, "-m", "compileall", "-q",
                 "src", "benchmarks", "examples", "scripts", "tests"],
+    # the federation suite runs as its own tier-1 step (mirrors CI);
+    # its chaos-grade scenario carries both marks and lands in "chaos"
+    "fed": [sys.executable, "-m", "pytest", "-q",
+            "-m", "fed and not chaos and not slow"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
-              "-m", "not chaos and not slow"],
+              "-m", "not chaos and not slow and not fed"],
     "chaos": [sys.executable, "-m", "pytest", "-q",
               "-m", "chaos or slow"],
     "bench": [sys.executable, "-m", "benchmarks.run", "--quick"],

@@ -47,7 +47,7 @@ import statistics
 import threading
 from collections import deque
 from contextlib import contextmanager
-from dataclasses import dataclass, field, replace
+from dataclasses import asdict, dataclass, field, replace
 
 from .clock import charge_to
 from .connector import Session, iter_files
@@ -224,6 +224,10 @@ class ManagerMetrics:
     cancelled: int = 0
     pauses: int = 0
     resumes: int = 0
+    #: federation traffic: tasks serialized out to / imported from a
+    #: peer control plane
+    exports: int = 0
+    imports: int = 0
     peak_active: int = 0
     #: high-water mark of concurrently-active tasks touching an endpoint
     peak_by_endpoint: dict = field(default_factory=dict)
@@ -263,9 +267,12 @@ class TransferManager:
                  advisor: Advisor | None = None, max_workers: int = 4,
                  per_endpoint_cap: int | None = 2,
                  share_sessions: bool = True, refit_every: int = 8,
-                 history_limit: int = 64, **service_kw):
+                 history_limit: int = 64, site_id: str = "", **service_kw):
         self.service = service or TransferService(**service_kw)
         self.advisor = advisor
+        #: federation identity: which site control plane this manager is
+        #: (stamped into TaskStats.site so attribution survives handoff)
+        self.site_id = site_id
         self.max_workers = max(1, max_workers)
         self.per_endpoint_cap = per_endpoint_cap
         #: auto-refit a route's perf model after this many successful
@@ -323,6 +330,8 @@ class TransferManager:
         task.stats.tenant = tenant
         task.stats.route = route_name
         task.stats.predicted_seconds = predicted
+        task.stats.site = self.site_id
+        task.stats.origin_site = self.site_id
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("manager is shut down")
@@ -703,6 +712,137 @@ class TransferManager:
                 self.service.clock.forget(tid)
         if self.sessions is not None:
             self.sessions.close_all()
+
+    # ---- federation: live-task travel + queue-state digests --------------
+    def export_state(self, task_id: str) -> dict | None:
+        """Serialize a queued or paused task for travel to a peer site.
+
+        Removes the task from this control plane: its heap entry is
+        tombstoned, its marker state (hole map + per-range digests) is
+        folded into the payload and cleared locally, and the local
+        handle finishes ``HANDED_OFF`` so waiters unblock.  Charge
+        accounting travels too — ``actual_model_seconds`` accrued here
+        rides in the payload and the importing site resumes the sum, so
+        per-task model time stays exact across control planes.
+
+        Returns ``None`` for a running or finished task (pause and wait
+        for the drain first — the coordinator does)."""
+        with self._lock:
+            sub = self._queued.pop(task_id, None)
+            state = "queued"
+            if sub is None:
+                sub = self._paused.pop(task_id, None)
+                state = "paused"
+            if sub is None:
+                return None
+            sub.queued_seq = None  # tombstone any live heap entry
+            self._all.pop(task_id, None)
+            self.metrics.exports += 1
+        st = sub.task.stats
+        payload = {
+            "version": 1,
+            "task_id": task_id,
+            "state": state,
+            "tenant": sub.tenant,
+            "priority": sub.priority,
+            "origin_site": st.origin_site or self.site_id,
+            "src": {"endpoint_id": sub.src.resolved_id(),
+                    "path": sub.src.path},
+            "dst": {"endpoint_id": sub.dst.resolved_id(),
+                    "path": sub.dst.path},
+            "options": asdict(sub.options),
+            "route": sub.route_name,
+            "n_files": sub.n_files_hint,
+            "nbytes": sub.nbytes_hint,
+            "stats": {"predicted_seconds": st.predicted_seconds,
+                      "actual_model_seconds": st.actual_model_seconds,
+                      "resumes": st.resumes},
+            "markers": self.service.markers.export_state(task_id),
+        }
+        self.service.markers.clear(task_id)
+        self.service.clock.forget(task_id)
+        sub.task._finish(TransferTask.HANDED_OFF)
+        return payload
+
+    def import_state(self, payload: dict, src: Endpoint,
+                     dst: Endpoint) -> TransferTask:
+        """Adopt a task serialized by a peer's :meth:`export_state`.
+
+        ``src``/``dst`` are this site's resolutions of the payload's
+        endpoint ids (connectors cannot travel; endpoint ownership maps
+        can).  The traveled marker state is installed first, so a
+        paused task resumes re-sending only its holes; carried stats
+        keep tenant/site attribution and the charge-accounted model
+        seconds accrued elsewhere."""
+        fields = TransferOptions.__dataclass_fields__
+        options = TransferOptions(**{k: v
+                                     for k, v in payload.get("options",
+                                                             {}).items()
+                                     if k in fields})
+        carried = payload.get("stats", {})
+        task = self.service.make_task(src, dst, payload["task_id"])
+        task.stats.tenant = payload.get("tenant", "")
+        task.stats.route = payload.get("route", "")
+        task.stats.site = self.site_id
+        task.stats.origin_site = payload.get("origin_site", "")
+        task.stats.predicted_seconds = carried.get("predicted_seconds", 0.0)
+        task.stats.actual_model_seconds = \
+            carried.get("actual_model_seconds", 0.0)
+        task.stats.resumes = carried.get("resumes", 0)
+        if payload.get("state") == "cancelled":
+            # terminal on arrival: registered for observability only —
+            # and its markers are NOT installed (nothing would ever
+            # clear them, and a later same-id submission must not
+            # inherit a cancelled task's hole map)
+            task.request_cancel()
+            task._finish(TransferTask.CANCELLED)
+            return task
+        markers = payload.get("markers")
+        if markers and markers.get("files"):
+            self.service.markers.import_state(task.task_id, markers)
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("manager is shut down")
+            sub = _Submission(task, src, dst, options,
+                              payload.get("tenant", "anonymous"),
+                              payload.get("priority", 0), next(self._seq),
+                              route_name=payload.get("route", ""),
+                              n_files_hint=payload.get("n_files", 0),
+                              nbytes_hint=payload.get("nbytes", 0))
+            if payload.get("state") == "paused":
+                # adopting a paused task IS its resume
+                task.stats.resumes += 1
+                self.metrics.resumes += 1
+            self._enqueue_locked(sub)
+            self.metrics.submitted += 1
+            self.metrics.imports += 1
+        self._pump()
+        return task
+
+    def settled(self, task_id: str) -> bool:
+        """True once no run loop (or its completion bookkeeping) holds
+        the task — it is queued, paused, or finished, so exporting it
+        or tearing the manager down cannot race its charge accounting."""
+        with self._lock:
+            return task_id not in self._running
+
+    def digest(self) -> dict:
+        """Queue-state snapshot a federation coordinator exchanges
+        between sites: depth, in-flight bytes, and per-endpoint
+        saturation (active tasks / cap)."""
+        with self._lock:
+            in_flight = sum(
+                max(0, s.task.stats.bytes_total - s.task.stats.bytes_done)
+                for s in self._running.values())
+            cap = self.per_endpoint_cap
+            saturation = {ep: (n / cap if cap else 0.0)
+                          for ep, n in self._active_eps.items()}
+            return {"site_id": self.site_id,
+                    "queued": len(self._queued),
+                    "running": len(self._running),
+                    "paused": len(self._paused),
+                    "in_flight_bytes": in_flight,
+                    "saturation": saturation}
 
     # ---- observability / online refit -----------------------------------
     def counts(self) -> dict:

@@ -133,6 +133,12 @@ class TransferOptions:
     #: ``Advisor.coalesce_threshold`` sizes this from a fitted model.
     coalesce_threshold: int = 1 * MB
     max_batch_files: int = 32       # files per pipelined batch
+    #: per-range digest granularity for integrity-on transfers: streamed
+    #: holes are chopped into segments of this many bytes and each
+    #: durable segment's digest is journaled in the MarkerStore, so a
+    #: resume (or a federated handoff) folds the prior segments instead
+    #: of re-reading the source for the §7 end-to-end checksum
+    digest_segment: int = 4 * MB
 
 
 @dataclass
@@ -165,6 +171,11 @@ class TaskStats:
     #: control-plane provenance (filled by the TransferManager)
     tenant: str = ""
     route: str = ""
+    #: federation provenance: the site control plane currently running
+    #: the task, and the site it was first submitted at — attribution
+    #: (tenant, model seconds) follows the task across handoffs
+    site: str = ""
+    origin_site: str = ""
     #: Advisor prediction vs. what the model clock actually charged, so
     #: the per-route perf model can be refit online from live traffic
     predicted_seconds: float = 0.0
@@ -178,6 +189,9 @@ class TransferTask:
 
     PENDING, ACTIVE, SUCCEEDED, FAILED = "PENDING", "ACTIVE", "SUCCEEDED", "FAILED"
     PAUSED, CANCELLED = "PAUSED", "CANCELLED"
+    #: terminal on THIS control plane only: the task was serialized and
+    #: handed to a peer site, which owns its lifecycle from here on
+    HANDED_OFF = "HANDED_OFF"
 
     RATE_WINDOW = 4096  # ring-buffer capacity for throughput samples
 
@@ -320,9 +334,18 @@ class MarkerStore:
                         break  # torn tail from a crash mid-append
                     st = state["files"].setdefault(
                         rec["file"], {"done": [], "complete": False})
-                    for k in ("done", "complete", "checksum"):
+                    for k in ("done", "complete", "checksum", "src_sig"):
                         if k in rec:
                             st[k] = rec[k]
+                    if rec.get("reset_digests"):
+                        # an integrity re-send threw the prior bytes
+                        # away; their digests must not survive it
+                        st.pop("digests", None)
+                    if "digests" in rec:
+                        # per-range digests accumulate across records (a
+                        # resume adds its holes' segments to the prior
+                        # run's), unlike "done" where the latest wins
+                        st.setdefault("digests", {}).update(rec["digests"])
         return state
 
     def save(self, task_id: str, state: dict) -> None:
@@ -357,6 +380,18 @@ class MarkerStore:
                 if os.path.exists(p):
                     os.remove(p)
             self._journal_counts.pop(task_id, None)
+
+    # ---- marker travel (federation handoff) ------------------------------
+    def export_state(self, task_id: str) -> dict:
+        """Folded snapshot of a task's marker state, JSON-clean — the
+        hole maps (and per-range digests) that let a peer control plane
+        resume the task re-sending only the missing bytes."""
+        return self.load(task_id)
+
+    def import_state(self, task_id: str, state: dict) -> None:
+        """Install a traveled marker snapshot for ``task_id`` (full
+        snapshot semantics: replaces any local state)."""
+        self.save(task_id, state)
 
 
 def _merge_ranges(ranges: list[list[int]]) -> list[list[int]]:
@@ -421,6 +456,167 @@ def _holes(size: int, done: list[list[int]]) -> list[ByteRange]:
 
 
 # --------------------------------------------------------------------------
+# streaming per-range digests (§7 checksum fold across pauses/handoffs)
+# --------------------------------------------------------------------------
+#: composite checksums (folded from per-range digests) carry this prefix
+#: so verification knows to chop the destination at the same boundaries
+COMPOSITE_PREFIX = "r:"
+
+
+def _range_key(offset: int, length: int) -> str:
+    return f"{offset}:{length}"
+
+
+def _key_range(key: str) -> tuple[int, int]:
+    off, _, ln = key.partition(":")
+    return int(off), int(ln)
+
+
+class RangeDigester:
+    """Streaming digests over a fixed plan of byte segments.
+
+    The plan is the run's holes chopped into ``segment``-byte pieces.
+    ``push`` folds blocks in ascending-offset order (buffering the
+    out-of-order ones) and finalizes one digest per completed segment —
+    so when a transfer is paused, cancelled, or handed to a peer site,
+    the digests of the fully-landed segments travel in the MarkerStore
+    and the resume *folds* them into the §7 end-to-end checksum instead
+    of re-reading the source.
+    """
+
+    def __init__(self, plan: list[ByteRange], algorithm: str):
+        self._plan = list(plan)
+        self._alg = algorithm
+        self._i = 0
+        self._h = hasher(algorithm) if self._plan else None
+        self._pos = self._plan[0].offset if self._plan else 0
+        self._pending: dict[int, bytes] = {}
+        #: "offset:length" -> hexdigest for every completed segment
+        self.digests: dict[str, str] = {}
+
+    @classmethod
+    def for_holes(cls, holes: list[ByteRange], algorithm: str,
+                  segment: int) -> "RangeDigester":
+        segment = max(1, segment)
+        plan = []
+        for h in holes:
+            off = h.offset
+            while off < h.end:
+                ln = min(segment, h.end - off)
+                plan.append(ByteRange(off, ln))
+                off += ln
+        return cls(plan, algorithm)
+
+    def push(self, offset: int, data: bytes) -> None:
+        """Fold one streamed block (caller holds the pipe lock).  Blocks
+        arrive from claim order so they never span holes, but may span
+        the digester's segment boundaries."""
+        if self._i >= len(self._plan):
+            return
+        self._pending[offset] = data
+        while self._i < len(self._plan) and self._pos in self._pending:
+            chunk = self._pending.pop(self._pos)
+            while chunk and self._i < len(self._plan):
+                seg = self._plan[self._i]
+                take = min(len(chunk), seg.end - self._pos)
+                self._h.update(chunk[:take])
+                self._pos += take
+                chunk = chunk[take:]
+                if self._pos >= seg.end:
+                    self.digests[_range_key(seg.offset, seg.length)] = \
+                        self._h.hexdigest()
+                    self._i += 1
+                    if self._i < len(self._plan):
+                        self._h = hasher(self._alg)
+                        self._pos = self._plan[self._i].offset
+
+    def completed(self, durable: list[list[int]]) -> dict[str, str]:
+        """Digests of segments whose bytes are all *durable* (inside the
+        given written ranges).  A block is folded at push time, before
+        the storage write acks — a segment digest is only trustworthy
+        for resume once every byte under it actually landed."""
+        merged = _merge_ranges([list(r) for r in durable])
+        out = {}
+        for key, hexd in self.digests.items():
+            off, ln = _key_range(key)
+            if any(o <= off and off + ln <= o + l for o, l in merged):
+                out[key] = hexd
+        return out
+
+
+def _digest_ranges(digests: dict[str, str]) -> list[list[int]]:
+    """The byte ranges a digest map covers, merged."""
+    return _merge_ranges([[off, ln] for off, ln in
+                          (_key_range(k) for k in digests)])
+
+
+def compose_digests(digests: dict[str, str], size: int,
+                    algorithm: str) -> str | None:
+    """Fold per-range digests into one composite checksum, or ``None``
+    when the segments do not tile ``[0, size)`` exactly (some bytes were
+    never digested — the caller must fall back to a source re-read).
+    The fold is order-and-boundary sensitive, so destination
+    verification recomputes it over the same boundaries."""
+    if size == 0:
+        return None
+    segs = sorted((_key_range(k) for k in digests), key=lambda r: r[0])
+    at = 0
+    for off, ln in segs:
+        if off != at:
+            return None
+        at = off + ln
+    if at != size:
+        return None
+    outer = hasher(algorithm)
+    for off, ln in segs:
+        hexd = digests[_range_key(off, ln)]
+        outer.update(f"{off}:{ln}:{hexd}\n".encode())
+    return COMPOSITE_PREFIX + outer.hexdigest()
+
+
+class _RangedDigestChannel(AppChannel):
+    """Read-only AppChannel that streams a file once and folds it into a
+    :class:`RangeDigester` over explicit boundaries — destination-side
+    §7 verification of a composite checksum (one dst read, no source
+    re-read)."""
+
+    def __init__(self, digester: RangeDigester, size: int, blocksize: int):
+        self._dig = digester
+        self._size = size
+        self._bs = blocksize
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def set_size(self, size: int) -> None:
+        self._size = min(self._size, size)
+
+    def write(self, offset: int, data: bytes) -> None:
+        with self._lock:
+            self._dig.push(offset, data)
+
+    def read(self, offset: int, length: int) -> bytes:
+        raise NotImplementedError("digest channel is read-only")
+
+    def get_concurrency(self) -> int:
+        return 1
+
+    def get_blocksize(self) -> int:
+        return self._bs
+
+    def get_read_range(self) -> ByteRange | None:
+        with self._lock:
+            if self._next >= self._size:
+                return None
+            length = min(self._bs, self._size - self._next)
+            rng = ByteRange(self._next, length)
+            self._next += length
+            return rng
+
+    def bytes_written(self, offset: int, length: int) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
 # per-file data pipe (the GridFTP data channel between two DTNs)
 # --------------------------------------------------------------------------
 class _FilePipe:
@@ -441,7 +637,8 @@ class _FilePipe:
 
     def __init__(self, size: int, holes: list[ByteRange], link: Link,
                  options: TransferOptions, on_written, checksum_alg: str | None,
-                 single_consumer: bool = False, abort=None):
+                 single_consumer: bool = False, abort=None,
+                 digester: RangeDigester | None = None):
         self.size = size
         self.link = link
         self.opt = options
@@ -462,6 +659,9 @@ class _FilePipe:
         self._hash = hasher(checksum_alg) if checksum_alg else None
         self._fold_at = holes[0].offset if holes else 0
         self._fold_pending: dict[int, bytes] = {}
+        #: optional per-segment digester riding the same block stream
+        #: (checksum fold across pauses/handoffs)
+        self.digester = digester
         self.send_channel = _SendSide(self)
         self.recv_channel = _RecvSide(self)
 
@@ -509,6 +709,8 @@ class _FilePipe:
                     chunk = self._fold_pending.pop(self._fold_at)
                     self._hash.update(chunk)
                     self._fold_at += len(chunk)
+            if self.digester is not None:
+                self.digester.push(offset, data)
             self._cv.notify_all()
 
     def fail(self, err: Exception) -> None:
@@ -636,7 +838,7 @@ class _BatchEntry:
     """One file's slot in a coalesced batch."""
 
     __slots__ = ("spath", "dpath", "size", "st", "holes", "full",
-                 "tracker", "pipe", "lock")
+                 "tracker", "pipe", "lock", "prior_done", "digester")
 
     def __init__(self, spath: str, dpath: str, size: int, st: dict,
                  holes: list[ByteRange]):
@@ -646,8 +848,10 @@ class _BatchEntry:
         self.st = st
         self.holes = holes
         self.full = holes == [ByteRange(0, size)] or size == 0
+        self.prior_done = [list(r) for r in st.get("done", [])]
         self.tracker = IntervalTracker(st.get("done", []))
         self.pipe: _FilePipe | None = None
+        self.digester: RangeDigester | None = None
         self.lock = threading.Lock()
 
 
@@ -809,7 +1013,9 @@ class TransferService:
         task._finish(TransferTask.SUCCEEDED if ok else TransferTask.FAILED)
 
     def _expand(self, src: Endpoint, dst: Endpoint, s_src: Session):
-        """Directory expansion + per-file (src, dst, size) plan (§2.2)."""
+        """Directory expansion + per-file (src, dst, size, mtime) plan
+        (§2.2).  The mtime rides along so resumes can detect a source
+        that changed under journaled progress."""
         root = src.path
         info = src.connector.stat(s_src, root)
         plan = []
@@ -818,13 +1024,40 @@ class TransferService:
                 rel = fi.name[len(root):].lstrip("/") if fi.name.startswith(root) \
                     else os.path.basename(fi.name)
                 dpath = dst.path.rstrip("/") + "/" + rel
-                plan.append((fi.name, dpath, fi.size))
+                plan.append((fi.name, dpath, fi.size, fi.mtime))
         else:
             dpath = dst.path
             if dpath.endswith("/"):
                 dpath += os.path.basename(root)
-            plan.append((root, dpath, info.size))
+            plan.append((root, dpath, info.size, info.mtime))
         return plan
+
+    def _guard_src_sig(self, task: TransferTask, fstate: dict, sp: str,
+                       size: int, mtime: float, st: dict | None) -> dict:
+        """Journaled partial progress (hole maps, per-range digests) is
+        only trustworthy while the source file is the one it was
+        computed from.  Stamp a (size, mtime) signature into the marker
+        state and, when a resume finds it changed, discard the traveled
+        progress so the file is re-sent whole — the §7 source re-read
+        this fold replaced would have caught the swap, so the fold must
+        too.  Files already marked complete keep the usual semantics (a
+        source modified after its transfer is staleness, not
+        corruption)."""
+        sig = [size, round(float(mtime), 6)]
+        if st is None:
+            st = fstate.setdefault(sp, {"done": [], "complete": False})
+        if not st.get("complete") \
+                and st.get("src_sig") is not None and st["src_sig"] != sig \
+                and (st.get("done") or st.get("digests")):
+            task.log(f"source changed under {sp}; discarding resume state")
+            st["done"] = []
+            st.pop("checksum", None)
+            st.pop("digests", None)
+            self.markers.append(task.task_id, sp,
+                                {"done": [], "complete": False,
+                                 "reset_digests": True, "src_sig": sig})
+        st["src_sig"] = sig
+        return st
 
     def _execute(self, task: TransferTask, src: Endpoint, dst: Endpoint,
                  s_src: Session, s_dst: Session, opt: TransferOptions) -> None:
@@ -832,12 +1065,16 @@ class TransferService:
         state = self.markers.load(task.task_id)
         fstate = state["files"]
         task.stats.files_total = len(plan)
-        task.stats.bytes_total = sum(sz for _, _, sz in plan)
+        task.stats.bytes_total = sum(sz for _, _, sz, _ in plan)
         link = self._link_factory(src.connector, dst.connector)
 
         pending: list[tuple[str, str, int]] = []
-        for sp, dp, sz in plan:
+        for sp, dp, sz, mtime in plan:
             st = fstate.get(sp)
+            if opt.integrity:
+                # the expansion already statted every file: zero-cost
+                # spot to invalidate resume state for changed sources
+                st = self._guard_src_sig(task, fstate, sp, sz, mtime, st)
             if st and st.get("complete"):
                 task.stats.files_done += 1
                 done_bytes = sz
@@ -983,9 +1220,16 @@ class TransferService:
                     self.markers.append(task.task_id, e.spath,
                                         {"done": e.st["done"]})
 
-            e.pipe = _FilePipe(e.size, e.holes, link, opt, on_written, alg,
+            if alg and e.size > 0:
+                e.digester = RangeDigester.for_holes(e.holes, alg,
+                                                     opt.digest_segment)
+            # whole-file fold only where it can complete (full
+            # single-run entry); resumed entries rely on the digesters
+            e.pipe = _FilePipe(e.size, e.holes, link, opt, on_written,
+                               alg if e.full else None,
                                single_consumer=True,
-                               abort=task.interrupt_exc)
+                               abort=task.interrupt_exc,
+                               digester=e.digester)
 
         if entries:
             by_src = {e.spath: e for e in entries}
@@ -1024,14 +1268,16 @@ class TransferService:
         counted_errs: set[int] = set()
         for e in entries:
             e.st["done"] = e.tracker.ranges()
+            self._fold_digests(e.st, e.prior_done, e.tracker, e.digester,
+                               e.size)
             err = e.pipe._error
             complete = e.size == 0 or e.tracker.covered >= e.size
             if isinstance(err, TaskInterrupted):
                 # pause/cancel reached this file mid-stream: checkpoint
-                # the partial ranges and leave it pending (neither done
-                # nor failed) for the resume to re-open
+                # the partial ranges (and their digests) and leave it
+                # pending (neither done nor failed) for the resume
                 self.markers.append(task.task_id, e.spath,
-                                    {"done": e.st["done"]})
+                                    self._checkpoint_record(e.st))
                 continue
             if err is not None or not complete:
                 if isinstance(err, TransientError) \
@@ -1047,11 +1293,13 @@ class TransferService:
                 checksum = e.pipe.source_checksum()
                 if opt.integrity and not e.full:
                     # resumed/holey file: the streaming hash missed the
-                    # prior bytes — recompute at the source (§7 semantics)
-                    checksum = src.connector.checksum(s_src, e.spath,
-                                                      opt.checksum_algorithm)
+                    # prior bytes — fold the journaled digests (§7
+                    # semantics without a source re-read), else recompute
+                    checksum = self._source_checksum_resumed(
+                        src, s_src, opt, e.st, e.spath, e.size)
                 if opt.integrity and self._should_verify(e.spath, opt):
-                    if not self._verify(dst, s_dst, e.dpath, checksum, opt):
+                    if not self._verify(dst, s_dst, e.dpath, checksum, opt,
+                                        digests=e.st.get("digests")):
                         task.stats.integrity_failures += 1
                         task.log(f"integrity mismatch on {e.dpath}; re-sending")
                         # un-credit the bytes being thrown away, then full
@@ -1059,6 +1307,10 @@ class TransferService:
                         task._bytes_tick(-e.tracker.covered)
                         e.st["done"] = []
                         e.st["complete"] = False
+                        e.st.pop("digests", None)
+                        self.markers.append(task.task_id, e.spath,
+                                            {"done": [],
+                                             "reset_digests": True})
                         task._note_batch_fallback()
                         fallback.append((e.spath, e.dpath, e.size))
                         continue
@@ -1101,7 +1353,7 @@ class TransferService:
                 # pause/cancel between attempts: checkpoint progress and
                 # leave the file pending for the resume
                 self.markers.append(task.task_id, spath,
-                                    {"done": st.get("done", [])})
+                                    self._checkpoint_record(st))
                 return
             attempts += 1
             result.attempts = attempts
@@ -1111,7 +1363,8 @@ class TransferService:
                 checksum = self._move_one(task, src, dst, s_src, s_dst, opt,
                                           link, st, spath, dpath, size)
                 if opt.integrity and self._should_verify(spath, opt):
-                    ok = self._verify(dst, s_dst, dpath, checksum, opt)
+                    ok = self._verify(dst, s_dst, dpath, checksum, opt,
+                                      digests=st.get("digests"))
                     if not ok:
                         task.stats.integrity_failures += 1
                         task.log(f"integrity mismatch on {dpath}; re-sending")
@@ -1121,6 +1374,13 @@ class TransferService:
                             -sum(ln for _, ln in st.get("done", [])))
                         st["done"] = []  # full re-send
                         st["complete"] = False
+                        # the thrown-away bytes' digests must not let a
+                        # later resume skip re-sending them — reset the
+                        # journaled map, not just the in-memory one
+                        st.pop("digests", None)
+                        self.markers.append(task.task_id, spath,
+                                            {"done": [],
+                                             "reset_digests": True})
                         if integrity_budget <= 0:
                             raise IntegrityError(dpath)
                         integrity_budget -= 1
@@ -1137,10 +1397,10 @@ class TransferService:
                 return
             except TaskInterrupted:
                 # mid-stream pause/cancel: _move_one already folded the
-                # landed ranges into st["done"] — checkpoint and leave
-                # the file pending
+                # landed ranges (and their segment digests) into ``st``
+                # — checkpoint and leave the file pending
                 self.markers.append(task.task_id, spath,
-                                    {"done": st.get("done", [])})
+                                    self._checkpoint_record(st))
                 return
             except TransientError as e:
                 task._note_fault(e)
@@ -1168,6 +1428,51 @@ class TransferService:
         h = int(hashlib.sha1(path.encode()).hexdigest()[:8], 16) / 0xFFFFFFFF
         return h < opt.verify_sampling
 
+    @staticmethod
+    def _fold_digests(st: dict, prior_done, tracker: IntervalTracker,
+                      digester: RangeDigester | None, size: int) -> None:
+        """Harvest this run's durable segment digests into ``st``.  When
+        the file is still incomplete (pause / fault / handoff ahead),
+        clamp the resumable "done" ranges to digest-backed coverage:
+        prior progress plus this run's *digested* segments.  Bytes that
+        landed but whose segment digest never finalized are re-sent on
+        resume — bounded by one ``digest_segment`` per hole — so the
+        composite checksum can always account for every skipped byte."""
+        if digester is None:
+            return
+        fresh = digester.completed(tracker.ranges())
+        if fresh:
+            st.setdefault("digests", {}).update(fresh)
+        if size > 0 and tracker.covered < size:
+            st["done"] = _merge_ranges(
+                [list(r) for r in prior_done]
+                + [[off, ln] for off, ln in
+                   (_key_range(k) for k in fresh)])
+
+    @staticmethod
+    def _checkpoint_record(st: dict) -> dict:
+        """Marker-journal record for an interrupted file: the resumable
+        ranges, the per-range digests that back them, and the source
+        signature they are only valid against."""
+        rec = {"done": st.get("done", [])}
+        if st.get("digests"):
+            rec["digests"] = st["digests"]
+        if st.get("src_sig") is not None:
+            rec["src_sig"] = st["src_sig"]
+        return rec
+
+    def _source_checksum_resumed(self, src, s_src, opt, st: dict,
+                                 spath: str, size: int) -> str:
+        """§7 source checksum for a file completed across several runs:
+        fold the journaled per-range digests when they tile the file
+        (no source re-read); otherwise fall back to re-reading the
+        source (pre-digest markers, or a kill that lost the tail)."""
+        comp = compose_digests(st.get("digests", {}), size,
+                               opt.checksum_algorithm)
+        if comp is not None:
+            return comp
+        return src.connector.checksum(s_src, spath, opt.checksum_algorithm)
+
     def _move_one(self, task, src, dst, s_src, s_dst, opt, link,
                   st: dict, spath: str, dpath: str,
                   size: int) -> str | None:
@@ -1176,14 +1481,31 @@ class TransferService:
             checksum = st.get("checksum")
             if checksum is None and opt.integrity:
                 # bytes are all present but never checksummed (e.g. a
-                # verify step that errored out mid-task): recompute, or
+                # verify step that errored out mid-task, or a handoff
+                # that landed between streaming and verification):
+                # fold the traveled digests, else recompute — or
                 # _verify(None) would silently skip verification
-                checksum = src.connector.checksum(s_src, spath,
-                                                  opt.checksum_algorithm)
+                checksum = self._source_checksum_resumed(
+                    src, s_src, opt, st, spath, size)
             return checksum
         if size == 0:
             holes = []
 
+        prior_done = [list(r) for r in st.get("done", [])]
+        full = len(holes) == 1 and holes[0].offset == 0 \
+            and holes[0].length == size
+        digester = None
+        if opt.integrity and size > 0:
+            # segment digests guard against interruption; the classic
+            # whole-file fold below is only fed on a full single-run
+            # transfer (a holey resume could never complete it anyway).
+            # A full run that finishes uninterrupted does hash twice —
+            # deliberate: its recorded checksum stays a plain whole-file
+            # digest, comparable to server-side checksums and to the
+            # paper's §7 semantics, while the segment digests are the
+            # insurance premium against a pause/handoff mid-run
+            digester = RangeDigester.for_holes(
+                holes, opt.checksum_algorithm, opt.digest_segment)
         tracker = IntervalTracker(st.get("done", []))
         marker_lock = threading.Lock()
 
@@ -1201,8 +1523,9 @@ class TransferService:
                 self.markers.append(task.task_id, spath, {"done": st["done"]})
 
         pipe = _FilePipe(size, holes, link, opt, on_written,
-                         opt.checksum_algorithm if opt.integrity else None,
-                         abort=task.interrupt_exc)
+                         opt.checksum_algorithm
+                         if opt.integrity and full else None,
+                         abort=task.interrupt_exc, digester=digester)
 
         send_err: list[Exception] = []
 
@@ -1223,6 +1546,7 @@ class TransferService:
             recv_err = e
         sender.join()
         st["done"] = tracker.ranges()
+        self._fold_digests(st, prior_done, tracker, digester, size)
         if send_err:
             raise send_err[0]
         if recv_err is not None:
@@ -1243,18 +1567,42 @@ class TransferService:
             if now_size > tracker.covered:
                 raise TruncatedStream(
                     f"{dpath}: {tracker.covered} of {size} bytes landed")
-        full = len(holes) == 1 and holes[0].offset == 0 and holes[0].length == size
         if opt.integrity and not full:
-            # resumed/holey transfer: the streaming hash didn't see the
-            # whole file — recompute at the source (§7 semantics)
-            return src.connector.checksum(s_src, spath, opt.checksum_algorithm)
+            # resumed/holey transfer: the streaming hash never saw the
+            # whole file — fold the journaled per-range digests (§7
+            # semantics without a source re-read), else recompute
+            return self._source_checksum_resumed(src, s_src, opt, st,
+                                                 spath, size)
         return pipe.source_checksum()
 
     def _verify(self, dst: Endpoint, s_dst: Session, dpath: str,
-                src_checksum: str | None, opt: TransferOptions) -> bool:
+                src_checksum: str | None, opt: TransferOptions,
+                digests: dict | None = None) -> bool:
         """§7 strong integrity: re-read the file at the destination and
-        compare checksums."""
+        compare checksums.  A composite source checksum (folded from
+        per-range digests across resumes/handoffs) is verified by
+        folding the destination over the same boundaries — still one
+        full dst read, never a source re-read."""
         if src_checksum is None:
             return True
+        if src_checksum.startswith(COMPOSITE_PREFIX):
+            return self._verify_composite(dst, s_dst, dpath, src_checksum,
+                                          digests or {}, opt)
         dst_sum = dst.connector.checksum(s_dst, dpath, opt.checksum_algorithm)
         return dst_sum == src_checksum
+
+    def _verify_composite(self, dst: Endpoint, s_dst: Session, dpath: str,
+                          src_checksum: str, digests: dict,
+                          opt: TransferOptions) -> bool:
+        segs = sorted((_key_range(k) for k in digests), key=lambda r: r[0])
+        if not segs:
+            return False
+        size = segs[-1][0] + segs[-1][1]
+        if dst.connector.stat(s_dst, dpath).size != size:
+            return False  # a plain checksum would catch the length skew
+        dig = RangeDigester([ByteRange(off, ln) for off, ln in segs],
+                            opt.checksum_algorithm)
+        dst.connector.send(s_dst, dpath,
+                           _RangedDigestChannel(dig, size, opt.blocksize))
+        return compose_digests(dig.digests, size,
+                               opt.checksum_algorithm) == src_checksum

@@ -1,0 +1,23 @@
+"""Federation plane: multiple site control planes, one third-party
+coordinator.
+
+* :mod:`repro.fed.spec` — :class:`TransferSpec`, the JSON-round-trip
+  submission value that lets a task (including a paused one, hole map
+  and checksum fold riding along) move between control planes.
+* :mod:`repro.fed.coordinator` — :class:`FederatedCoordinator`:
+  endpoint-ownership placement (owner / least-loaded /
+  advisor-predicted-fastest), periodic queue-state digest exchange,
+  task handoff, and site-failure re-homing — all without ever touching
+  file bytes (enforced by the charge-attribution clock).
+"""
+
+from .coordinator import (PLACEMENT_POLICIES, FederatedCoordinator,
+                          FedMetrics, QueueDigest, SiteHandle,
+                          StrandedTasksError)
+from .spec import SPEC_STATES, TransferSpec
+
+__all__ = [
+    "FederatedCoordinator", "FedMetrics", "PLACEMENT_POLICIES",
+    "QueueDigest", "SiteHandle", "SPEC_STATES", "StrandedTasksError",
+    "TransferSpec",
+]

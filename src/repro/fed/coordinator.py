@@ -1,0 +1,509 @@
+"""Federated multi-site control plane (paper §2.1, scaled to a fleet of
+control planes).
+
+The paper's orchestrator coordinates transfers between sites *without
+sitting in the data path*.  :class:`FederatedCoordinator` reproduces
+that one level up: it registers N :class:`~repro.core.manager.
+TransferManager` sites with endpoint-ownership maps, routes each
+serialized :class:`~repro.fed.spec.TransferSpec` to a site by a
+pluggable placement policy, exchanges periodic queue-state digests, and
+supports **handoff** — re-serializing a queued or paused task from an
+overloaded or failed site and resuming it on a peer, the traveled hole
+map guaranteeing only the missing bytes are re-sent.
+
+Third-party semantics are enforced by the charge-attribution clock
+(:mod:`repro.core.clock`): every coordinator entry point runs with the
+coordinator as the thread's charge owner, so any model time it accrued
+would be tallied against it — :meth:`model_seconds` must therefore read
+0.0, and :meth:`assert_third_party` turns that into a hard invariant.
+Data-plane time lands on worker threads that re-bind the charge owner
+to the task, so cross-site stats stay attributed to the originating
+tenant and task, never to the coordinator.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+
+from ..core.clock import charge_to
+from ..core.connector import Connector
+from ..core.perfmodel import Advisor
+from ..core.transfer import Endpoint, TransferTask
+from .spec import TransferSpec
+
+#: built-in placement policy names (see :meth:`FederatedCoordinator._place`)
+PLACEMENT_POLICIES = ("owner", "least-loaded", "advisor")
+
+
+class StrandedTasksError(LookupError):
+    """A site failure could not re-home every task.  ``moved`` lists
+    the ``(task_id, new_site_id)`` pairs that WERE re-homed before the
+    error (the work is not lost, only unreported by the return value);
+    ``stranded`` names the tasks left on the dead site's durable
+    store."""
+
+    def __init__(self, site_id: str, moved, stranded):
+        self.site_id = site_id
+        self.moved = list(moved)
+        self.stranded = list(stranded)
+        super().__init__(
+            f"no live site could adopt {self.stranded!r} from "
+            f"{site_id!r}; their marker state remains on the dead "
+            f"site's store ({len(self.moved)} others re-homed first)")
+
+
+@dataclass
+class QueueDigest:
+    """One site's periodic queue-state report, as exchanged between
+    control planes: enough for placement, nothing data-plane."""
+
+    site_id: str
+    seq: int
+    queued: int
+    running: int
+    paused: int
+    in_flight_bytes: int
+    #: endpoint id -> active tasks / per-endpoint cap (0.0 if uncapped)
+    saturation: dict = field(default_factory=dict)
+
+    @property
+    def depth(self) -> int:
+        return self.queued + self.running
+
+
+@dataclass
+class FedMetrics:
+    submissions: int = 0
+    handoffs: int = 0
+    failovers: int = 0
+    digest_exchanges: int = 0
+    #: site_id -> tasks placed there (initial placements + handoffs in)
+    placements: dict = field(default_factory=dict)
+    #: (task_id, site_id, reason) in placement order — "submit",
+    #: "handoff", or "failover"
+    placement_log: list = field(default_factory=list)
+
+
+class SiteHandle:
+    """One registered site: its manager, the endpoints it can reach,
+    and the subset it *owns* (is closest to)."""
+
+    def __init__(self, site_id: str, manager, endpoints: dict, owns):
+        self.site_id = site_id
+        self.manager = manager
+        self.endpoints: dict[str, Connector] = dict(endpoints)
+        self.owns = set(endpoints if owns is None else owns)
+        self.alive = True
+        self.digest: QueueDigest | None = None
+
+    def resolves(self, spec: TransferSpec) -> bool:
+        return (spec.src_endpoint in self.endpoints
+                and spec.dst_endpoint in self.endpoints)
+
+    def endpoint_pair(self, spec: TransferSpec) -> tuple[Endpoint, Endpoint]:
+        src = Endpoint(self.endpoints[spec.src_endpoint], spec.src_path,
+                       spec.src_endpoint)
+        dst = Endpoint(self.endpoints[spec.dst_endpoint], spec.dst_path,
+                       spec.dst_endpoint)
+        return src, dst
+
+    def load(self) -> int:
+        """Queue depth from the last digest exchange (live snapshot when
+        none has happened yet)."""
+        if self.digest is not None:
+            return self.digest.depth
+        c = self.manager.counts()
+        return c["queued"] + c["running"]
+
+
+class FederatedCoordinator:
+    """Routes serialized submissions across registered sites and moves
+    live tasks between them.  Never opens a connector session, never
+    touches file bytes: it handles *references* (specs, endpoint ids,
+    digests), exactly the paper's third-party posture.
+
+    ``placement`` picks the site for a spec: ``"owner"`` (the site
+    whose ownership map claims the spec's *source* endpoint — the
+    paper's place-close-to-the-source rule; least-loaded among multiple
+    owners), ``"least-loaded"`` (smallest queue depth from the digest
+    exchange), ``"advisor"`` (fastest predicted completion: each
+    candidate site's Advisor route prediction scaled by its queue
+    depth), or any callable ``(spec, candidates) -> SiteHandle``.
+    """
+
+    def __init__(self, placement: str = "owner", name: str = "fed",
+                 digest_every: int = 4):
+        self.placement = placement
+        #: charge-clock identity all coordinator work is attributed to;
+        #: third-party semantics == this owner's tally stays 0.0
+        self.charge_owner = f"fed:{name}"
+        #: exchange queue-state digests every this many submissions
+        #: (and on demand via :meth:`exchange_digests`)
+        self.digest_every = max(1, digest_every)
+        self.metrics = FedMetrics()
+        self._sites: dict[str, SiteHandle] = {}
+        self._placements: dict[str, str] = {}      # task_id -> site_id
+        self._tasks: dict[str, TransferTask] = {}  # task_id -> live handle
+        self._specs: dict[str, TransferSpec] = {}  # last serialized form
+        self._digest_seq = itertools.count(1)
+        self._since_exchange = 0
+        self._lock = threading.RLock()
+
+    # ---- membership ------------------------------------------------------
+    def register_site(self, site_id: str, manager,
+                      endpoints: dict[str, Connector],
+                      owns=None) -> SiteHandle:
+        """Register one site control plane.  ``endpoints`` maps endpoint
+        id -> connector for every endpoint the site can reach; ``owns``
+        names the subset it is authoritative (closest) for — defaults
+        to all of them."""
+        with self._lock:
+            if site_id in self._sites:
+                raise ValueError(f"site {site_id!r} already registered")
+            if not manager.site_id:
+                manager.site_id = site_id
+            site = SiteHandle(site_id, manager, endpoints, owns)
+            self._sites[site_id] = site
+            return site
+
+    def sites(self) -> dict[str, SiteHandle]:
+        with self._lock:
+            return dict(self._sites)
+
+    def site_of(self, task_id: str) -> str | None:
+        with self._lock:
+            return self._placements.get(task_id)
+
+    def task(self, task_id: str) -> TransferTask:
+        """The task's *current* live handle (follows handoffs)."""
+        with self._lock:
+            return self._tasks[task_id]
+
+    def last_spec(self, task_id: str) -> TransferSpec | None:
+        """The most recent serialized form the coordinator placed —
+        after a handoff this is the traveled spec, hole map included."""
+        with self._lock:
+            return self._specs.get(task_id)
+
+    # ---- queue-state digests ---------------------------------------------
+    def exchange_digests(self) -> dict[str, QueueDigest]:
+        with self._lock, charge_to(self.charge_owner):
+            return self._exchange_locked()
+
+    def _exchange_locked(self) -> dict[str, QueueDigest]:
+        out = {}
+        for site in self._sites.values():
+            if not site.alive:
+                continue
+            d = site.manager.digest()
+            site.digest = QueueDigest(
+                site_id=site.site_id, seq=next(self._digest_seq),
+                queued=d["queued"], running=d["running"],
+                paused=d["paused"],
+                in_flight_bytes=d["in_flight_bytes"],
+                saturation=d["saturation"])
+            out[site.site_id] = site.digest
+        self.metrics.digest_exchanges += 1
+        self._since_exchange = 0
+        return out
+
+    def _maybe_exchange_locked(self) -> None:
+        self._since_exchange += 1
+        if self._since_exchange >= self.digest_every \
+                or self.metrics.digest_exchanges == 0:
+            self._exchange_locked()
+
+    # ---- placement -------------------------------------------------------
+    def _candidates(self, spec: TransferSpec,
+                    exclude: str | None = None) -> list[SiteHandle]:
+        sites = [s for s in self._sites.values()
+                 if s.alive and s.site_id != exclude and s.resolves(spec)]
+        if not sites:
+            raise LookupError(
+                f"no live site resolves both endpoints of {spec.task_id!r} "
+                f"({spec.src_endpoint!r} -> {spec.dst_endpoint!r})")
+        return sites
+
+    def _place(self, spec: TransferSpec,
+               candidates: list[SiteHandle]) -> SiteHandle:
+        if callable(self.placement):
+            return self.placement(spec, candidates)
+        if self.placement == "owner":
+            owners = [s for s in candidates if spec.src_endpoint in s.owns]
+            pool = owners or candidates
+            return min(pool, key=lambda s: s.load())
+        if self.placement == "least-loaded":
+            return min(candidates, key=lambda s: s.load())
+        if self.placement == "advisor":
+            return min(candidates, key=lambda s: self._predicted(s, spec))
+        raise ValueError(f"unknown placement policy {self.placement!r}")
+
+    @staticmethod
+    def _predicted(site: SiteHandle, spec: TransferSpec) -> float:
+        """Predicted completion on ``site``: the Advisor's route model
+        for this workload, serialized behind the site's current queue
+        depth (depth+1 workloads of this shape, a deliberately simple
+        backlog model).  Sites without a fitted advisor sort last."""
+        adv = site.manager.advisor
+        if adv is None or not adv.routes:
+            return float("inf")
+        route = next((r for r in adv.routes if r.name == spec.route),
+                     adv.routes[0])
+        _, _, eta = Advisor([route]).best(max(1, spec.n_files), spec.nbytes)
+        return eta * (1 + site.load())
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, spec: TransferSpec | str,
+               sync: bool = False) -> TransferTask:
+        """Place one serialized submission on a site and return that
+        site's live task handle.  Accepts a :class:`TransferSpec` or
+        its JSON wire form."""
+        if isinstance(spec, str):
+            spec = TransferSpec.from_json(spec)
+        spec.validate()
+        with self._lock, charge_to(self.charge_owner):
+            self.metrics.submissions += 1
+            self._maybe_exchange_locked()
+            site = self._place(spec, self._candidates(spec))
+            task = self._import_at_locked(site, spec, reason="submit")
+        if sync:
+            task.wait()
+        return task
+
+    def _import_at_locked(self, site: SiteHandle, spec: TransferSpec,
+                          reason: str) -> TransferTask:
+        if not spec.origin_site:
+            spec.origin_site = site.site_id  # first placement is origin
+        src, dst = site.endpoint_pair(spec)
+        task = site.manager.import_state(spec.to_payload(), src, dst)
+        self._placements[spec.task_id] = site.site_id
+        self._tasks[spec.task_id] = task
+        self._specs[spec.task_id] = spec
+        self.metrics.placements[site.site_id] = \
+            self.metrics.placements.get(site.site_id, 0) + 1
+        self.metrics.placement_log.append(
+            (spec.task_id, site.site_id, reason))
+        return task
+
+    # ---- handoff ---------------------------------------------------------
+    def _drain_export(self, site: SiteHandle, task_id: str,
+                      timeout: float) -> dict | None:
+        """Export a task from ``site``, pausing it first if it is
+        running.  ``None`` when the task finished before it could be
+        exported (the handoff lost the race — nothing to move)."""
+        mgr = site.manager
+        payload = mgr.export_state(task_id)
+        if payload is not None:
+            return payload
+        mgr.pause(task_id)
+        try:
+            task = mgr.get(task_id)
+        except KeyError:
+            return None
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            payload = mgr.export_state(task_id)
+            if payload is not None:
+                return payload
+            if task._done.is_set():
+                return None  # completed/failed before the pause landed
+            task.wait_idle(0.05)
+        raise TimeoutError(
+            f"task {task_id!r} did not drain off {site.site_id!r} "
+            f"within {timeout}s")
+
+    def _precheck_adoption(self, task_id: str, origin_id: str,
+                           to_site: str | None) -> None:
+        """Raise BEFORE the destructive export if no site could adopt
+        the task — endpoints never change across handoffs, so the last
+        placed spec answers this without touching the origin."""
+        ref = self._specs.get(task_id)
+        if ref is None:
+            raise LookupError(f"unknown task {task_id!r}")
+        if to_site is not None:
+            site = self._sites.get(to_site)
+            if site is None or not (site.alive and site.resolves(ref)):
+                raise LookupError(
+                    f"site {to_site!r} cannot adopt {task_id!r}")
+        else:
+            self._candidates(ref, exclude=origin_id)
+
+    @staticmethod
+    def _await_settled(site: SiteHandle, task_id: str,
+                       timeout: float) -> None:
+        """Wait until ``task_id`` has no run loop (paused checkpoint
+        durable, charge bookkeeping complete) or finished."""
+        mgr = site.manager
+        try:
+            task = mgr.get(task_id)
+        except KeyError:
+            return
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if task._done.is_set() or (task.status == TransferTask.PAUSED
+                                       and mgr.settled(task_id)):
+                return
+            task.wait_idle(0.05)
+        raise TimeoutError(
+            f"task {task_id!r} did not settle on {site.site_id!r} "
+            f"within {timeout}s")
+
+    def handoff(self, task_id: str, to_site: str | None = None,
+                timeout: float = 30.0) -> TransferTask | None:
+        """Move one queued/paused/running task to a peer site.  A
+        running task is paused and drained first, so its hole map (and
+        checksum fold) travel and the peer re-sends only the holes.
+        Returns the adopting site's task handle, or ``None`` when the
+        task finished before it could move."""
+        with self._lock:
+            origin_id = self._placements.get(task_id)
+            if origin_id is None:
+                raise LookupError(f"unknown task {task_id!r}")
+            origin = self._sites[origin_id]
+            self._precheck_adoption(task_id, origin_id, to_site)
+        with charge_to(self.charge_owner):
+            payload = self._drain_export(origin, task_id, timeout)
+            if payload is None:
+                return None
+            spec = TransferSpec.from_payload(payload)
+            with self._lock:
+                try:
+                    if to_site is not None:
+                        site = self._sites[to_site]
+                        if not (site.alive and site.resolves(spec)):
+                            raise LookupError(
+                                f"site {to_site!r} cannot adopt "
+                                f"{task_id!r}")
+                    else:
+                        site = self._place(
+                            spec, self._candidates(spec,
+                                                   exclude=origin_id))
+                except Exception:
+                    # never strand an exported task: the origin adopts
+                    # its own spec back (a queued re-import) rather
+                    # than losing the traveled marker state
+                    if origin.alive:
+                        self._import_at_locked(origin, spec,
+                                               reason="handoff-abort")
+                    raise
+                task = self._import_at_locked(site, spec, reason="handoff")
+                self.metrics.handoffs += 1
+        return task
+
+    # ---- site failure ----------------------------------------------------
+    def fail_site(self, site_id: str,
+                  timeout: float = 30.0) -> list[tuple[str, str]]:
+        """Take a site out of rotation and re-home every task it still
+        holds.  Running tasks are paused (their partial progress is
+        checkpointed through the site's MarkerStore — the emulation of
+        a crash with durable restart markers), serialized, and resumed
+        on peers re-sending only the holes.  Returns
+        ``[(task_id, new_site_id), ...]`` for every task moved."""
+        with self._lock:
+            site = self._sites[site_id]
+            site.alive = False
+            doomed = [tid for tid, sid in self._placements.items()
+                      if sid == site_id
+                      and not self._tasks[tid]._done.is_set()]
+            # a task no peer can adopt must NOT be exported (the export
+            # would clear the only copy of its marker state); it is
+            # still paused and drained below, so its checkpoint lands
+            # on the dead site's durable store before teardown
+            stranded = []
+            for tid in doomed:
+                try:
+                    self._precheck_adoption(tid, site_id, None)
+                except LookupError:
+                    stranded.append(tid)
+            adoptable = [tid for tid in doomed if tid not in stranded]
+        moved: list[tuple[str, str]] = []
+        try:
+            with charge_to(self.charge_owner):
+                # request every pause first — stranded tasks included,
+                # or they would keep streaming on the "failed" site and
+                # shutdown would forget their live charge tallies —
+                # then drain: tasks checkpoint concurrently, not
+                # serially
+                for tid in doomed:
+                    site.manager.pause(tid)
+                for tid in stranded:
+                    try:
+                        self._await_settled(site, tid, timeout)
+                    except TimeoutError:
+                        pass  # reported via StrandedTasksError below
+                for tid in adoptable:
+                    try:
+                        payload = self._drain_export(site, tid, timeout)
+                    except TimeoutError:
+                        # one wedged drain must not abort the rest of
+                        # the failover (or lose the `moved` record)
+                        stranded.append(tid)
+                        continue
+                    if payload is None:
+                        continue  # finished during the drain
+                    spec = TransferSpec.from_payload(payload)
+                    with self._lock:
+                        peer = self._place(
+                            spec, self._candidates(spec,
+                                                   exclude=site_id))
+                        self._import_at_locked(peer, spec,
+                                               reason="failover")
+                    moved.append((tid, peer.site_id))
+        finally:
+            self.metrics.failovers += 1
+            site.manager.shutdown(wait=False)
+        if stranded:
+            raise StrandedTasksError(site_id, moved, stranded)
+        return moved
+
+    # ---- lifecycle fan-out ----------------------------------------------
+    def wait_all(self, timeout: float | None = None) -> bool:
+        """Wait until every placed task has finished on its current
+        site (paused tasks excluded, as in ``TransferManager``)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                pending = [t for t in self._tasks.values()
+                           if not t._done.is_set()
+                           and t.status != TransferTask.PAUSED]
+            if not pending:
+                return True
+            remaining = None if deadline is None \
+                else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                return False
+            step = 0.02 if remaining is None else min(0.02, remaining)
+            pending[0].wait(step)
+
+    def shutdown(self, wait: bool = True,
+                 timeout: float | None = None) -> None:
+        if wait:
+            self.wait_all(timeout)
+        with self._lock:
+            sites = list(self._sites.values())
+        for site in sites:
+            if site.alive:
+                site.manager.shutdown(wait=False)
+
+    # ---- third-party invariant ------------------------------------------
+    def model_seconds(self) -> float:
+        """Model time charged to the coordinator across every site's
+        clock.  The third-party contract says this is exactly 0.0: the
+        coordinator moves references, the sites' worker threads move
+        bytes (and charge their own tasks)."""
+        clocks = {}
+        with self._lock:
+            for site in self._sites.values():
+                clock = site.manager.service.clock
+                clocks[id(clock)] = clock
+        return sum(c.charged(self.charge_owner) for c in clocks.values())
+
+    def assert_third_party(self) -> None:
+        charged = self.model_seconds()
+        if charged > 0.0:
+            raise AssertionError(
+                f"third-party violation: coordinator {self.charge_owner!r} "
+                f"accrued {charged:.6f} model seconds of data-plane time")

@@ -38,6 +38,7 @@ from ..core import (Credential, CredentialStore, Endpoint, RouteCandidate,
                     TransferManager, TransferOptions, TransferService)
 from ..core.clock import Clock
 from ..core.faults import FaultSchedule
+from ..fed import FederatedCoordinator, TransferSpec
 
 KB = 1024
 MB = 1024 * 1024
@@ -207,6 +208,146 @@ def check_invariants(task, expected: dict[str, bytes],
                 if dest.get(rel) != expected.get(rel):
                     v.append(f"file marked ok but not byte-exact: {fr.src}")
     return v
+
+
+# --------------------------------------------------------------------------
+# federation instrumentation
+# --------------------------------------------------------------------------
+class _MeteredRecvChannel:
+    """AppChannel wrapper that reports every byte a connector pulls from
+    the application (i.e. bytes about to be written to storage)."""
+
+    def __init__(self, inner, on_read):
+        self._inner = inner
+        self._on_read = on_read
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
+
+    def read(self, offset: int, length: int) -> bytes:
+        data = self._inner.read(offset, length)
+        self._on_read(len(data))
+        return data
+
+
+class _InstrumentedDst:
+    """Transparent wrapper around a destination connector that counts
+    bytes written to storage per path — the evidence behind the "every
+    byte written exactly once, even across a handoff" invariant."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self._lock = threading.Lock()
+        self.bytes_by_path: dict[str, int] = {}
+
+    def __getattr__(self, item):
+        # stat/listdir/send/start/... all forward to the inner connector
+        return getattr(self.inner, item)
+
+    def written(self, prefix: str = "") -> int:
+        with self._lock:
+            return sum(n for p, n in self.bytes_by_path.items()
+                       if p.startswith(prefix))
+
+    def _on_read(self, path: str, n: int) -> None:
+        with self._lock:
+            self.bytes_by_path[path] = self.bytes_by_path.get(path, 0) + n
+
+    def _meter(self, path: str, channel):
+        return _MeteredRecvChannel(
+            channel, lambda n, p=path: self._on_read(p, n))
+
+    def recv(self, session, path, channel):
+        self.inner.recv(session, path, self._meter(path, channel))
+
+    def recv_batch(self, session, paths, channel_factory):
+        def factory(path):
+            ch = channel_factory(path)
+            return None if ch is None else self._meter(path, ch)
+
+        self.inner.recv_batch(session, paths, factory)
+
+
+class _HeldWriteChannel:
+    """Send-side AppChannel wrapper gating each block before it enters
+    the pipe."""
+
+    def __init__(self, inner, gate):
+        self._inner = inner
+        self._gate = gate
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
+
+    def write(self, offset: int, data: bytes) -> None:
+        self._gate(len(data))
+        self._inner.write(offset, data)
+
+
+class _HoldSrc:
+    """Wrapper around a *source* connector that, once ``after_bytes``
+    cumulative bytes have streamed under the watched prefixes, blocks
+    every further send-side block until :meth:`release`.
+
+    This is the deterministic "mid-flight" hook for federation tests:
+    blocking on the send side (before the block enters the pipe) means
+    the held task still has unclaimed byte ranges when the control
+    plane pauses it — the pause lands before release, so the resulting
+    checkpoint is guaranteed to carry real partial progress AND real
+    holes.  The crossing block itself is let through, so at least
+    ``after_bytes`` of durable, marker-checkpointed progress exists to
+    travel with a handoff.
+    """
+
+    def __init__(self, inner):
+        self.inner = inner
+        self._lock = threading.Lock()
+        self._prefixes: tuple[str, ...] = ()
+        self._after = 0
+        self._total = 0
+        self.engaged = threading.Event()
+        self.released = threading.Event()
+        self.released.set()
+
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+    def arm_hold(self, prefixes, after_bytes: int) -> None:
+        self._prefixes = tuple(prefixes)
+        self._after = after_bytes
+        self._total = 0
+        self.engaged.clear()
+        self.released.clear()
+
+    def release(self) -> None:
+        self.released.set()
+
+    def _gate(self, path: str, n: int) -> None:
+        hold = False
+        with self._lock:
+            if self._after and any(path.startswith(p)
+                                   for p in self._prefixes):
+                # threshold checked BEFORE adding: the crossing block
+                # passes, everything after it blocks
+                hold = self._total >= self._after
+                self._total += n
+        if hold and not self.released.is_set():
+            self.engaged.set()
+            self.released.wait(timeout=60.0)
+
+    def _held(self, path: str, channel):
+        return _HeldWriteChannel(channel,
+                                 lambda n, p=path: self._gate(p, n))
+
+    def send(self, session, path, channel):
+        self.inner.send(session, path, self._held(path, channel))
+
+    def send_batch(self, session, paths, channel_factory):
+        def factory(path):
+            ch = channel_factory(path)
+            return None if ch is None else self._held(path, ch)
+
+        self.inner.send_batch(session, paths, factory)
 
 
 # --------------------------------------------------------------------------
@@ -512,6 +653,264 @@ class ScenarioRunner:
                 + "\n  ".join(violations))
         return result
 
+    # ---- a federation of sites with a mid-flight site failure ------------
+    def run_federated(self, n_sites: int = 2, n_tasks: int = 4,
+                      tenants=("alice", "bob"),
+                      trees=("few-large", "many-small", "mixed"),
+                      placement: str = "owner",
+                      schedule: FaultSchedule | None = None,
+                      options: TransferOptions | None = None,
+                      fail_site: bool = True, victim: int = 1,
+                      max_workers: int = 3, hold_after: int = 4096,
+                      seed: int = 0, timeout: float = 240.0,
+                      strict: bool = False) -> "FederatedScenarioResult":
+        """Run ``n_tasks`` transfers through a
+        :class:`~repro.fed.FederatedCoordinator` over ``n_sites`` site
+        control planes, then kill one site mid-flight and assert the
+        federation contract end-to-end.
+
+        Topology: site ``i`` owns source endpoint ``src-s{i}`` (its own
+        seeded connector); a single destination endpoint ``dst-ep`` —
+        owned by site 0, reachable by all — collects every task's tree
+        under ``out/t{j}``.  Task ``j`` sources from site
+        ``j % n_sites``, so the owner placement policy must scatter the
+        fleet across sites.  Every submission goes through the
+        ``TransferSpec`` JSON wire form (serializability is part of
+        what's under test).  A byte-threshold hold on the victim site's
+        destination paths guarantees at least one of its tasks is
+        genuinely mid-flight when :meth:`FederatedCoordinator.fail_site`
+        fires; the fault ``schedule`` (if any) proxies the *source*
+        side only, so the destination write-once invariant stays exact.
+
+        Invariants, on top of the per-task :func:`check_invariants`:
+
+        * every submission was initially placed at its source's owner;
+        * the failed site hands off at least one task with traveled
+          partial progress, and every handed-off task completes on its
+          new site with the originating tenant (and origin site) still
+          attributed — including charge-accounted model seconds;
+        * with integrity off, every byte lands exactly once fleet-wide
+          (``written == bytes_total`` per task): a handoff re-sends
+          only the holes;
+        * the coordinator never accrues model time (third-party
+          semantics via the charge clock);
+        * per-site worker budgets hold.
+        """
+        with self._lock:
+            self._n += 1
+            run_dir = os.path.join(self.base_dir, f"fed{self._n:03d}")
+        os.makedirs(run_dir, exist_ok=True)
+        n_sites = max(2, n_sites) if fail_site else max(1, n_sites)
+        victim_site = f"s{victim % n_sites}"
+
+        # one seeded source connector per site; one shared destination
+        src_inners = [MemoryConnector() for _ in range(n_sites)]
+        per_task_files: list[dict[str, bytes]] = []
+        specs: list[TransferSpec] = []
+        for j in range(n_tasks):
+            files, _empty = canonical_tree(trees[j % len(trees)], seed + j)
+            remapped = {f"{SRC_ROOT}/t{j}/" + name[len(SRC_ROOT) + 1:]: data
+                        for name, data in files.items()}
+            per_task_files.append(remapped)
+            store = src_inners[j % n_sites].store
+            for name, data in remapped.items():
+                store.put(name, data)
+
+        if schedule is not None and schedule.clock is None:
+            schedule.clock = self.clock
+        src_conns = [FaultProxyConnector(c, schedule)
+                     if schedule is not None else c for c in src_inners]
+        hold = None
+        if fail_site:
+            # gate the victim's SOURCE streams: once the threshold
+            # crosses, its tasks stop making progress until the kill
+            # has landed its pause requests — so the checkpoint that
+            # travels is guaranteed mid-flight (progress AND holes)
+            hold = _HoldSrc(src_conns[victim % n_sites])
+            src_conns[victim % n_sites] = hold
+            hold.arm_hold([SRC_ROOT + "/"], hold_after)
+        dst_inner = MemoryConnector()
+        dst_conn = _InstrumentedDst(dst_inner)
+
+        endpoints = {f"src-s{i}": src_conns[i] for i in range(n_sites)}
+        endpoints["dst-ep"] = dst_conn
+        coord = FederatedCoordinator(placement=placement)
+        for i in range(n_sites):
+            creds = CredentialStore()
+            for tenant in tenants:
+                creds.register(f"src-s{i}", Credential(
+                    "local-user", {"identity": tenant}))
+            owns = {f"src-s{i}"} | ({"dst-ep"} if i == 0 else set())
+            manager = TransferManager(
+                max_workers=max_workers, per_endpoint_cap=None,
+                credential_store=creds,
+                marker_root=os.path.join(run_dir, f"site{i}", "markers"),
+                clock=self.clock, site_id=f"s{i}")
+            coord.register_site(f"s{i}", manager, endpoints, owns=owns)
+
+        options = options or TransferOptions(
+            startup_cost=0.0, retry_backoff=0.01, concurrency=2)
+        victim_ids: list[str] = []
+        for j in range(n_tasks):
+            spec = TransferSpec.new(
+                f"fed-{self._n:03d}-t{j}",
+                f"src-s{j % n_sites}", f"{SRC_ROOT}/t{j}",
+                "dst-ep", f"{DST_ROOT}/t{j}",
+                tenant=tenants[j % len(tenants)], options=options,
+                n_files=len(per_task_files[j]),
+                nbytes=sum(len(d) for d in per_task_files[j].values()))
+            specs.append(spec)
+            if j % n_sites == victim % n_sites:
+                victim_ids.append(spec.task_id)
+        # the wire form IS the submission: serializability under test
+        for spec in specs:
+            coord.submit(spec.to_json())
+
+        violations: list[str] = []
+        moved: list[tuple[str, str]] = []
+        if fail_site:
+            if not hold.engaged.wait(timeout=min(60.0, timeout)):
+                violations.append("hold never engaged: the victim site "
+                                  "had no mid-flight task to kill")
+                hold.release()
+            else:
+                fail_err: list[Exception] = []
+
+                def do_fail():
+                    try:
+                        moved.extend(coord.fail_site(victim_site,
+                                                     timeout=timeout))
+                    except Exception as e:  # surfaced as a violation
+                        fail_err.append(e)
+
+                failer = threading.Thread(target=do_fail, daemon=True)
+                failer.start()
+                # release the held stream only once every victim task has
+                # its pause landed (or finished): the site's checkpoint
+                # is guaranteed to happen while the task was mid-flight
+                victim_tasks = [coord.task(tid) for tid in victim_ids]
+                import time as _time
+                t_end = _time.monotonic() + min(60.0, timeout)
+                while _time.monotonic() < t_end:
+                    if all(t._done.is_set() or t._pause_req.is_set()
+                           or t.status == t.PAUSED for t in victim_tasks):
+                        break
+                    _time.sleep(0.005)
+                hold.release()
+                failer.join(timeout)
+                if failer.is_alive():
+                    violations.append("fail_site wedged: failover did "
+                                      "not complete within the timeout")
+                for e in fail_err:
+                    violations.append(f"fail_site raised: "
+                                      f"{type(e).__name__}: {e}")
+
+        finished = coord.wait_all(timeout=timeout)
+        dest_all = {}
+        if finished:
+            pfx = DST_ROOT + "/"
+            dest_all = {k[len(pfx):]: dst_inner.store.get(k)
+                        for k in dst_inner.store.keys()
+                        if k.startswith(pfx)}
+
+        results: list[ScenarioResult] = []
+        for j, spec in enumerate(specs):
+            task = coord.task(spec.task_id)
+            site_id = coord.site_of(spec.task_id)
+            mgr = coord.sites()[site_id].manager
+            pfx = f"t{j}/"
+            expected = {name[len(SRC_ROOT) + 1:]: data
+                        for name, data in per_task_files[j].items()}
+            dest = {k: v for k, v in dest_all.items() if k.startswith(pfx)}
+            task_done = finished and task._done.is_set()
+            markers_after = mgr.service.markers.load(spec.task_id) \
+                if task_done else {"files": {"unfinished": True}}
+            v = check_invariants(task, expected, dest, schedule,
+                                 markers_after, task_done,
+                                 options.integrity)
+            results.append(ScenarioResult(
+                task=task, schedule=schedule, expected=expected, dest=dest,
+                violations=v, route=f"fed:{site_id}",
+                tree=trees[j % len(trees)]))
+            violations.extend(f"task {j}: {x}" for x in v)
+
+        # federation-level invariants --------------------------------------
+        if placement == "owner":
+            first_place = {}
+            for tid, sid, reason in coord.metrics.placement_log:
+                if reason == "submit" and tid not in first_place:
+                    first_place[tid] = sid
+            for j, spec in enumerate(specs):
+                owner = f"s{j % n_sites}"
+                if first_place.get(spec.task_id) != owner:
+                    violations.append(
+                        f"task {j}: placed at "
+                        f"{first_place.get(spec.task_id)!r}, but "
+                        f"{owner!r} owns its source endpoint")
+        if fail_site and hold.engaged.is_set():
+            if not moved:
+                violations.append("site failure moved no tasks (all "
+                                  "finished before the kill?)")
+            if not any(coord.last_spec(tid) is not None
+                       and coord.last_spec(tid).done_bytes() > 0
+                       for tid, _ in moved):
+                violations.append("no handed-off task carried partial "
+                                  "progress (hole map did not travel)")
+            for tid, new_site in moved:
+                task = coord.task(tid)
+                if task.status != task.SUCCEEDED:
+                    violations.append(f"handed-off {tid} ended "
+                                      f"{task.status} on {new_site}")
+                if task.stats.site != new_site:
+                    violations.append(f"{tid}: stats.site "
+                                      f"{task.stats.site!r} != adopting "
+                                      f"site {new_site!r}")
+                if task.stats.origin_site != victim_site:
+                    violations.append(f"{tid}: origin_site "
+                                      f"{task.stats.origin_site!r} lost "
+                                      f"across the handoff")
+        for j, spec in enumerate(specs):
+            task = coord.task(spec.task_id)
+            want = tenants[j % len(tenants)]
+            if task.stats.tenant != want:
+                violations.append(f"task {j}: tenant attribution "
+                                  f"{task.stats.tenant!r} != {want!r}")
+            if task.status == task.SUCCEEDED \
+                    and task.stats.bytes_total > 0 \
+                    and task.stats.actual_model_seconds <= 0:
+                violations.append(f"task {j}: no model seconds charged "
+                                  f"to it (attribution broken)")
+            if not options.integrity and finished:
+                written = dst_conn.written(f"{DST_ROOT}/t{j}/")
+                if task.status == task.SUCCEEDED \
+                        and written != task.stats.bytes_total:
+                    violations.append(
+                        f"task {j}: {written} bytes written at dst for "
+                        f"{task.stats.bytes_total} byte tree — a handoff "
+                        f"must re-send only the holes")
+        try:
+            coord.assert_third_party()
+        except AssertionError as e:
+            violations.append(str(e))
+        for site_id, handle in coord.sites().items():
+            peak = handle.manager.metrics.peak_active
+            if peak > max_workers:
+                violations.append(f"site {site_id}: worker budget "
+                                  f"exceeded ({peak} > {max_workers})")
+        if not finished:
+            violations.append("wedged: the federation did not finish "
+                              "within the timeout")
+
+        coord.shutdown(wait=False)
+        result = FederatedScenarioResult(
+            results=results, coordinator=coord, moved=moved,
+            violations=violations)
+        if strict and violations:
+            raise AssertionError(
+                "federated scenario violated invariants:\n  "
+                + "\n  ".join(violations))
+        return result
+
 
 @dataclass
 class MultiScenarioResult:
@@ -519,6 +918,25 @@ class MultiScenarioResult:
 
     results: list[ScenarioResult]
     manager: TransferManager
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def tasks(self):
+        return [r.task for r in self.results]
+
+
+@dataclass
+class FederatedScenarioResult:
+    """Outcome of :meth:`ScenarioRunner.run_federated`."""
+
+    results: list[ScenarioResult]
+    coordinator: FederatedCoordinator
+    #: (task_id, new_site_id) for every task the site failure re-homed
+    moved: list = field(default_factory=list)
     violations: list[str] = field(default_factory=list)
 
     @property
