@@ -1,0 +1,137 @@
+"""Resilience benchmark: the health plane under endpoint sickness.
+
+Two questions, both straight from the ISSUE 6 acceptance list:
+
+1. **Goodput vs fault rate, breakers on/off** — the same probabilistic
+   fault sweep as bench_chaos, run twice per rate: once with the bare
+   retry loop (``health=None``) and once with a shared
+   :class:`EndpointHealth` gating every attempt.  The interesting
+   columns are the number of *storage-touching* attempts (the retry
+   pressure on the sick endpoint) and the goodput of whatever bytes
+   still land: breakers should slash the former without collapsing the
+   latter at moderate rates.
+
+2. **Time-to-automatic-failover** — the flapping-site degraded scenario
+   measured on the model clock: from the moment the coordinator starts
+   counting sustained heartbeat misses to the beat that re-homes the
+   dark site's work.
+
+Emits ``resilience.*`` rows; seed-deterministic modulo thread timing.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.connectors import FaultProxyConnector
+from repro.core import (Endpoint, EndpointHealth, FaultSchedule,
+                        HealthConfig, TransferOptions)
+from repro.core.clock import Clock
+from repro.sim import ScenarioRunner
+
+from .common import MB, QUICK, emit, make_env, seed_local_files, split_dataset
+
+FAULT_RATES = (0.0, 0.1, 0.3) if QUICK else (0.0, 0.05, 0.1, 0.2, 0.4)
+N_FILES = 12 if QUICK else 32
+FILE_KB = 128
+
+
+def _schedule(rate: float) -> FaultSchedule:
+    sched = FaultSchedule(seed=4321)
+    if rate > 0:
+        sched.transient(op="recv*", prob=rate, times=None)
+        sched.transient(op="read", prob=rate / 2, times=None)
+    return sched
+
+
+def _sweep_point(rate: float, with_health: bool) -> dict:
+    with tempfile.TemporaryDirectory() as tmp:
+        env = make_env(tmp, virtual=True)
+        _, conn = env.cloud("s3", "local")
+        sched = _schedule(rate)
+        sched.clock = env.clock
+        proxy = FaultProxyConnector(conn, sched, clock=env.clock)
+        env.creds.register("sick-dst", env.creds.lookup(conn.name))
+        if with_health:
+            env.service.health = EndpointHealth(
+                HealthConfig(error_threshold=0.5, ewma_alpha=0.4,
+                             min_samples=3, cooldown=0.2,
+                             retry_budget_rate=2.0,
+                             retry_budget_capacity=16.0),
+                clock=env.clock)
+        parts = split_dataset(N_FILES * FILE_KB * 1024, N_FILES)
+        src = seed_local_files(env, f"res{int(rate * 100):02d}", parts)
+        v0 = env.clock.virtual_elapsed
+        task = env.service.submit(
+            Endpoint(env.local, src),
+            Endpoint(proxy, f"bkt/res{int(rate * 100):02d}", "sick-dst"),
+            TransferOptions(concurrency=4, startup_cost=0.0,
+                            retry_backoff=0.05, max_retries=4,
+                            unavailable_patience=5.0,
+                            coalesce_threshold=0), sync=True)
+        dt = env.clock.virtual_elapsed - v0
+        st = task.stats
+        hp = env.service.health
+        return {"model_s": dt,
+                "goodput_mb_s": st.bytes_done / max(dt, 1e-9) / MB,
+                "attempts": sched.count("transient"),
+                "denials": (st.retries_by_kind.get("EndpointUnavailable", 0)
+                            if hp is not None else 0),
+                "status": task.status}
+
+
+def run() -> dict:
+    out: dict = {"sweep": {}}
+    for rate in FAULT_RATES:
+        pair = {}
+        for label, with_health in (("off", False), ("on", True)):
+            row = _sweep_point(rate, with_health)
+            pair[label] = row
+            emit(f"resilience.p{int(rate * 100):02d}.breakers_{label}",
+                 row["model_s"],
+                 f"goodput={row['goodput_mb_s']:.1f}MB/s "
+                 f"attempts={row['attempts']} denials={row['denials']} "
+                 f"status={row['status'].lower()}")
+        out["sweep"][rate] = pair
+        if rate > 0 and pair["off"]["attempts"]:
+            ratio = pair["off"]["attempts"] / max(pair["on"]["attempts"], 1)
+            emit(f"resilience.p{int(rate * 100):02d}.attempt_ratio", 0.0,
+                 f"x{ratio:.2f} fewer storage attempts with breakers on")
+
+    # time-to-automatic-failover (heartbeat monitor, model clock)
+    with tempfile.TemporaryDirectory() as tmp:
+        res = ScenarioRunner(tmp, clock=Clock(scale=0.0)).run_degraded(
+            "flapping-site", seed=0, strict=True)
+        out["failover_model_s"] = res.failover_model_seconds
+        emit("resilience.failover", res.failover_model_seconds,
+             f"auto_failovers={res.coordinator.metrics.auto_failovers} "
+             f"moved={len(res.moved)} ok={res.ok}")
+
+    # breaker recovery latency through a bounded brownout storm
+    with tempfile.TemporaryDirectory() as tmp:
+        res = ScenarioRunner(tmp, clock=Clock(scale=0.0)).run_degraded(
+            "brownout", seed=0, strict=True)
+        times = [t for t, ep, _, _ in res.health.transitions
+                 if ep == "dst-ep"]
+        recovery = (times[-1] - times[0]) if len(times) > 1 else 0.0
+        out["brownout_recovery_model_s"] = recovery
+        emit("resilience.brownout_recovery", recovery,
+             f"transitions={len(res.transitions)} "
+             f"probes={res.retries_by_kind.get('HalfOpenProbe', 0)} "
+             f"ok={res.ok}")
+
+    # retry-storm suppression: 20-task fleet vs a dead endpoint
+    with tempfile.TemporaryDirectory() as tmp:
+        res = ScenarioRunner(tmp, clock=Clock(scale=0.0)).run_degraded(
+            "death", seed=0, strict=True)
+        naive = 20 * 7  # n_tasks * (max_retries + 1)
+        out["death_attempts"] = res.attempts
+        emit("resilience.death_suppression", 0.0,
+             f"attempts={res.attempts} naive={naive} "
+             f"x{naive / max(res.attempts, 1):.1f} suppression ok={res.ok}")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -30,6 +30,7 @@ SUITES: dict[str, tuple[str, str]] = {
     "intercloud": ("bench_intercloud", "Figs 17-18"),
     "integrity": ("bench_integrity", "Figs 19-21"),
     "chaos": ("bench_chaos", "goodput vs fault rate"),
+    "resilience": ("bench_resilience", "health plane: breakers + failover"),
     "manager": ("bench_manager", "fleet goodput + fairness + refit"),
     "federation": ("bench_federation", "multi-site goodput + handoff"),
     "ckpt": ("bench_ckpt", "framework: §8 coalescing"),

@@ -12,6 +12,8 @@ Lanes:
   compile  byte-compile src/benchmarks/examples/scripts/tests
   fed      PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
   tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow and not fed"
+  degraded PYTHONPATH=src pytest -q tests/test_degraded_scenarios.py
+           -m "chaos or fed"  (health plane: brownout / death / failover)
   chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
   bench    PYTHONPATH=src python -m benchmarks.run --quick
 """
@@ -45,6 +47,10 @@ LANES: dict[str, list[str]] = {
             "-m", "fed and not chaos and not slow"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
               "-m", "not chaos and not slow and not fed"],
+    # mirrors the CI chaos job's named degraded-mode step (health plane)
+    "degraded": [sys.executable, "-m", "pytest", "-q",
+                 "tests/test_degraded_scenarios.py",
+                 "-m", "chaos or fed"],
     "chaos": [sys.executable, "-m", "pytest", "-q",
               "-m", "chaos or slow"],
     "bench": [sys.executable, "-m", "benchmarks.run", "--quick"],

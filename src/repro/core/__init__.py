@@ -6,10 +6,11 @@
 
 from .connector import (AppChannel, ByteRange, Connector, Credential,
                         Session, StatInfo, iter_files)
-from .errors import (AuthError, ConnectorError, FaultInjected, IntegrityError,
-                     NotFound, PermanentError, RateLimitError, TransientError,
-                     TruncatedStream)
+from .errors import (AuthError, ConnectorError, EndpointUnavailable,
+                     FaultInjected, IntegrityError, NotFound, PermanentError,
+                     RateLimitError, TransientError, TruncatedStream)
 from .faults import FaultEvent, FaultRule, FaultSchedule
+from .health import EndpointHealth, HealthConfig
 from .transfer import (CredentialStore, Endpoint, TaskInterrupted,
                        TransferOptions, TransferService, TransferTask)
 from .manager import RouteCandidate, SessionPool, TransferManager
@@ -21,10 +22,11 @@ from .clock import Clock, Link, TokenBucket, loopback
 __all__ = [
     "AppChannel", "ByteRange", "Connector", "Credential", "Session",
     "StatInfo", "iter_files",
-    "AuthError", "ConnectorError", "FaultInjected", "IntegrityError",
-    "NotFound", "PermanentError", "RateLimitError", "TransientError",
-    "TruncatedStream",
+    "AuthError", "ConnectorError", "EndpointUnavailable", "FaultInjected",
+    "IntegrityError", "NotFound", "PermanentError", "RateLimitError",
+    "TransientError", "TruncatedStream",
     "FaultEvent", "FaultRule", "FaultSchedule",
+    "EndpointHealth", "HealthConfig",
     "CredentialStore", "Endpoint", "TaskInterrupted", "TransferOptions",
     "TransferService", "TransferTask",
     "RouteCandidate", "SessionPool", "TransferManager",

@@ -5,6 +5,21 @@ limits / call quotas on Google Drive and Box, flaky WAN links) that the
 managed transfer service must retry automatically, from permanent errors
 (missing object, bad credential) that must surface to the client on the
 control channel.
+
+Breaker / fast-fail taxonomy (health plane, :mod:`repro.core.health`)
+---------------------------------------------------------------------
+Per-endpoint circuit breakers add a third failure mode: an attempt can
+be denied *locally*, before any storage op, because the endpoint's
+recent error rate opened its breaker or its shared retry budget ran
+dry.  That denial is :class:`EndpointUnavailable` — still a
+:class:`TransientError` (the retry loop handles it), but with fast-fail
+semantics: no storage was touched, so the loop sleeps only the breaker's
+``retry_after`` hint (model seconds until the breaker may half-open or
+the budget refills) instead of exponential backoff.  It is counted
+distinctly in ``TaskStats.retries_by_kind``, alongside the
+``"HalfOpenProbe"`` pseudo-kind for attempts admitted as half-open
+probes — so a fault schedule, the breaker's denials, and its probes are
+all separately observable on a task.
 """
 
 from __future__ import annotations
@@ -29,6 +44,21 @@ class TransientError(ConnectorError):
 
 class RateLimitError(TransientError):
     """Storage API call-quota exceeded (Google Drive / Box, paper §4)."""
+
+
+class EndpointUnavailable(TransientError):
+    """Fast-fail from the health plane: the endpoint's circuit breaker
+    is open (``reason="breaker-open"``), a half-open probe is already in
+    flight (``"probe-in-flight"``), or the endpoint's shared retry
+    budget is exhausted (``"retry-budget"``).  The attempt was denied
+    locally — no storage op happened.  ``retry_after`` carries the model
+    seconds until the condition may clear."""
+
+    def __init__(self, msg: str = "", retry_after: float = 0.0,
+                 endpoint_id: str = "", reason: str = ""):
+        super().__init__(msg, retry_after)
+        self.endpoint_id = endpoint_id
+        self.reason = reason
 
 
 class FaultInjected(TransientError):

@@ -226,6 +226,27 @@ class FaultSchedule:
                   op: str = "*", path: str = "*", **kw) -> "FaultSchedule":
         return self.add(FaultRule("error", op=op, path=path, error=error, **kw))
 
+    # -- endpoint-degradation profiles (health-plane scenarios) ----------
+    def dead_endpoint(self, op: str = "*", path: str = "*",
+                      **kw) -> "FaultSchedule":
+        """Permanent endpoint death: every matching op fails transiently,
+        forever.  Each firing is one attempt that actually *reached* the
+        endpoint, so ``count("transient")`` measures the aggregate
+        attempt pressure a retry policy (or a circuit breaker's retry
+        budget) allowed through."""
+        return self.transient(op=op, path=path, times=None, **kw)
+
+    def brownout(self, times: int, op: str = "*", path: str = "*",
+                 **kw) -> "FaultSchedule":
+        """A bounded degradation window: the first ``times`` matching
+        ops — counted globally across all paths — fail transiently, then
+        the endpoint recovers.  The *total* number of injected failures
+        is exactly ``times`` under any thread schedule (the counter is
+        locked); which paths absorb them may vary, so assert on breaker
+        transitions and outcome totals, not per-path event order."""
+        return self.transient(op=op, path=path, times=times,
+                              scope="global", **kw)
+
     # -- engine ----------------------------------------------------------
     def _bump(self, i: int, rule: FaultRule, op: str, path: str) -> int:
         key = (i,) if rule.scope == "global" else (i, op, path)

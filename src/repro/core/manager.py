@@ -235,6 +235,9 @@ class ManagerMetrics:
     dispatches_by_tenant: dict = field(default_factory=dict)
     #: (tenant, task_id) in dispatch order — round-robin observability
     dispatch_log: list = field(default_factory=list)
+    #: dispatches deferred because an endpoint's circuit breaker was
+    #: open at pick time (health plane, :mod:`repro.core.health`)
+    health_deferrals: int = 0
     #: route -> automatic refits performed by the online loop
     refits: dict = field(default_factory=dict)
     #: (route, predict_gen, predicted_s, actual_s) per successful routed
@@ -267,8 +270,14 @@ class TransferManager:
                  advisor: Advisor | None = None, max_workers: int = 4,
                  per_endpoint_cap: int | None = 2,
                  share_sessions: bool = True, refit_every: int = 8,
-                 history_limit: int = 64, site_id: str = "", **service_kw):
+                 history_limit: int = 64, site_id: str = "",
+                 health=None, **service_kw):
         self.service = service or TransferService(**service_kw)
+        if health is not None:
+            # shared health plane: the data plane's retry loop and this
+            # scheduler consult the SAME registry, so a breaker opened
+            # by one task's failures steers every later dispatch
+            self.service.health = health
         self.advisor = advisor
         #: federation identity: which site control plane this manager is
         #: (stamped into TaskStats.site so attribution survives handoff)
@@ -301,6 +310,12 @@ class TransferManager:
         #: per-route refit generation (0 = seed model)
         self._refit_gen: dict[str, int] = {}
         self._shutdown = False
+
+    @property
+    def health(self):
+        """The shared :class:`~repro.core.health.EndpointHealth` registry
+        (``None`` when the health plane is off)."""
+        return self.service.health
 
     # ---- submission ------------------------------------------------------
     def submit(self, src: Endpoint | None = None, dst: Endpoint | None = None,
@@ -380,6 +395,14 @@ class TransferManager:
                     estimates[key] = self._estimate_workload(cand.src)
                 workload = estimates[key]
             _, cc, predicted = Advisor([route]).best(*workload)
+            health = self.service.health
+            if health is not None and health.denied(cand.src.resolved_id(),
+                                                    cand.dst.resolved_id()):
+                # score around open breakers: a huge (not infinite)
+                # penalty keeps a healthy replica winning whenever one
+                # exists, while an all-unhealthy candidate set still
+                # places somewhere instead of erroring
+                predicted *= 1e6
             if best is None or predicted < best[3]:
                 best = (cand, route, cc, predicted, workload)
         cand, route, cc, predicted, workload = best
@@ -422,18 +445,21 @@ class TransferManager:
         return all(self._active_eps.get(ep_id, 0) < self.per_endpoint_cap
                    for ep_id in sub.ep_ids)
 
-    def _pick_locked(self) -> _Submission | None:
+    def _pick_locked(self, ignore_health: bool = False) -> _Submission | None:
         """Next runnable submission: tenants rotate round-robin; within
-        a tenant, lowest (priority, seq) whose endpoints are under cap.
+        a tenant, lowest (priority, seq) whose endpoints are under cap
+        and (when the health plane is on) have no open breaker.
 
         The heaps use lazy deletion: pause/cancel (and a pick itself)
         clear ``sub.queued_seq`` instead of scanning + re-heapifying, so
         a pick is O(log n) pops — tombstones fall out here, and entries
-        popped while their endpoints were at cap are pushed back.  (The
-        old sorted(heap) + heap.remove + heapify pick was O(n log n)
-        each, O(n^2 log n) to drain a fleet-sized queue.)"""
+        popped while their endpoints were at cap (or breaker-denied)
+        are pushed back.  (The old sorted(heap) + heap.remove + heapify
+        pick was O(n log n) each, O(n^2 log n) to drain a fleet-sized
+        queue.)"""
         if len(self._running) >= self.max_workers:
             return None
+        health = None if ignore_health else self.service.health
         for _ in range(len(self._rr)):
             tenant = self._rr.pop(0)
             self._rr.append(tenant)
@@ -447,11 +473,19 @@ class TransferManager:
                 sub = item[2]
                 if sub.queued_seq != item[1]:
                     continue  # tombstone: dequeued or re-queued since
-                if self._eligible_locked(sub):
-                    sub.queued_seq = None
-                    picked = sub
-                    break
-                deferred.append(item)  # at cap: stays queued
+                if not self._eligible_locked(sub):
+                    deferred.append(item)  # at cap: stays queued
+                    continue
+                if health is not None and health.denied(*sub.ep_ids):
+                    # an endpoint breaker is open: don't burn a worker
+                    # slot fast-failing — leave it queued; completions
+                    # (and the _pump liveness fallback) re-pick it
+                    self.metrics.health_deferrals += 1
+                    deferred.append(item)
+                    continue
+                sub.queued_seq = None
+                picked = sub
+                break
             for item in deferred:
                 heapq.heappush(heap, item)
             if picked is not None:
@@ -484,6 +518,14 @@ class TransferManager:
                 return
             while True:
                 sub = self._pick_locked()
+                if sub is None and not self._running \
+                        and self.service.health is not None:
+                    # liveness backstop: with everything health-deferred
+                    # and nothing running, no completion will ever pump
+                    # again — admit one denied submission anyway and let
+                    # the data plane's admit() gate pace it (fast-fail +
+                    # breaker retry_after), instead of wedging the queue
+                    sub = self._pick_locked(ignore_health=True)
                 if sub is None:
                     return
                 self._activate_locked(sub)
@@ -837,12 +879,16 @@ class TransferManager:
             cap = self.per_endpoint_cap
             saturation = {ep: (n / cap if cap else 0.0)
                           for ep, n in self._active_eps.items()}
+            health = self.service.health
             return {"site_id": self.site_id,
                     "queued": len(self._queued),
                     "running": len(self._running),
                     "paused": len(self._paused),
                     "in_flight_bytes": in_flight,
-                    "saturation": saturation}
+                    "saturation": saturation,
+                    "unavailable_endpoints":
+                        sorted(health.unavailable()) if health is not None
+                        else []}
 
     # ---- observability / online refit -----------------------------------
     def counts(self) -> dict:

@@ -53,11 +53,34 @@ from .clock import (Clock, DEFAULT_CLOCK, Link, bind_charge_owner, charge_to,
                     loopback)
 from .connector import (AppChannel, ByteRange, Connector, Credential, Session,
                         iter_files)
-from .errors import (IntegrityError, PermanentError, TransientError,
-                     TruncatedStream)
+from .errors import (EndpointUnavailable, IntegrityError, PermanentError,
+                     TransientError, TruncatedStream)
 from .integrity import hasher
 
 MB = 1024 * 1024
+
+
+def _retry_jitter(task_id: str, path: str, attempt: int) -> float:
+    """Deterministic uniform [0, 1) from (task_id, path, attempt) — the
+    per-attempt jitter seed for retry backoff.  Hash-derived rather than
+    drawn from a shared RNG stream so coalesced batch-mates (same fault,
+    same attempt number, different paths) spread out instead of retrying
+    in lockstep, while a same-seed replay of the same task stays
+    byte-for-byte reproducible."""
+    basis = f"{task_id}|{path}|{attempt}".encode()
+    h = hashlib.sha1(basis).digest()
+    return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+
+def _blame_endpoint(err: Exception, endpoint_id: str) -> None:
+    """Stamp the endpoint an error is attributed to, if nothing (e.g. a
+    health-plane denial) already claimed it — how the retry loop knows
+    which breaker/budget to charge."""
+    if not getattr(err, "endpoint_id", ""):
+        try:
+            err.endpoint_id = endpoint_id
+        except Exception:
+            pass  # exotic exception types without settable attrs
 
 
 class TaskInterrupted(Exception):
@@ -123,6 +146,16 @@ class TransferOptions:
     max_retries: int = 5
     max_integrity_retries: int = 2
     retry_backoff: float = 0.5      # model seconds, doubled per attempt
+    #: model seconds a file keeps waiting on consecutive breaker/budget
+    #: fast-fail denials (``EndpointUnavailable``) before giving up.
+    #: Denials are local — no storage op happens — so they do NOT count
+    #: against ``max_retries``; this deadline is what bounds them.  The
+    #: window restarts on an admitted attempt AND on any breaker
+    #: transition in the health registry (recovery progress: probes
+    #: cycling, breakers closing), so a file only gives up after the
+    #: health plane has been *stuck* this long — e.g. a dead endpoint
+    #: whose retry budget is dry and whose breaker stays open.
+    unavailable_patience: float = 30.0
     startup_cost: float = 2.3       # third-party coordination (paper §5.4)
     file_pipeline_cost: float = 0.005  # pipelined per-file command cost
     auto_tune: bool = False         # §8: probe concurrency upward
@@ -260,6 +293,14 @@ class TransferTask:
     def _note_batch_fallback(self) -> None:
         with self._lock:
             self.stats.batch_fallbacks += 1
+
+    def _note_probe(self) -> None:
+        """Account one attempt admitted as a half-open breaker probe —
+        a distinct ``retries_by_kind`` pseudo-kind (not a fault: the
+        probe may well succeed and close the breaker)."""
+        with self._lock:
+            self.stats.retries_by_kind["HalfOpenProbe"] = \
+                self.stats.retries_by_kind.get("HalfOpenProbe", 0) + 1
 
     def throughput(self, window: float = 2.0) -> float:
         """Instantaneous B/s over the trailing window (perf markers)."""
@@ -885,11 +926,15 @@ class TransferService:
 
     def __init__(self, credential_store: CredentialStore | None = None,
                  marker_root: str | None = None, clock: Clock | None = None,
-                 data_link_factory=None):
+                 data_link_factory=None, health=None):
         self.creds = credential_store or CredentialStore()
         self.markers = MarkerStore(marker_root or os.path.join(
             os.environ.get("TMPDIR", "/tmp"), "repro-markers"))
         self.clock = clock or DEFAULT_CLOCK
+        #: optional shared :class:`~repro.core.health.EndpointHealth`
+        #: registry; when set, every attempt is gated by the endpoint
+        #: circuit breakers + retry budgets and reports its outcome back
+        self.health = health
         self._link_factory = data_link_factory or self._default_link
         self._tasks: dict[str, TransferTask] = {}
         self._manager = None
@@ -1191,6 +1236,20 @@ class TransferService:
         exchange and one ``_FilePipe`` pool via the Connector bulk API.
         Per-file failures are contained: the failed file falls back to
         the per-file retry path; its batch-mates are unaffected."""
+        if self.health is not None:
+            denied = self.health.denied(src.resolved_id(), dst.resolved_id())
+            if denied:
+                # a breaker on either end is open: don't launch a bulk
+                # exchange that would fail wholesale — route every file
+                # through the per-file path, whose admit() gate holds
+                # each attempt to the breaker/budget discipline
+                task.log(f"batch: breaker open on {', '.join(denied)}; "
+                         f"routing {len(files)} file(s) per-file")
+                for sp, dp, size in files:
+                    task._note_batch_fallback()
+                    self._transfer_file(task, src, dst, s_src, s_dst, opt,
+                                        link, fstate, state, sp, dp, size)
+                return
         # one pipelined control-channel exchange for the whole batch
         self.clock.sleep(opt.file_pipeline_cost)
         alg = opt.checksum_algorithm if opt.integrity else None
@@ -1284,6 +1343,13 @@ class TransferService:
                         and id(err) not in counted_errs:
                     counted_errs.add(id(err))
                     task._note_fault(err)
+                    if self.health is not None:
+                        # ticket-free outcome report: the batch path has
+                        # no per-attempt admit(), but its faults must
+                        # still feed the endpoint EWMAs
+                        self.health.record_failure(src.resolved_id(),
+                                                   dst.resolved_id(),
+                                                   error=err)
                 task._note_batch_fallback()
                 task.log(f"batch: {e.spath} fell back to per-file path "
                          f"({type(err).__name__ if err else 'incomplete'})")
@@ -1334,6 +1400,9 @@ class TransferService:
             task.stats.files_done += 1
             task.files.append(FileResult(e.spath, e.dpath, e.size, attempts=1,
                                          checksum=checksum, ok=True))
+            if self.health is not None:
+                self.health.record_success(src.resolved_id(),
+                                           dst.resolved_id())
 
         for sp, dp, size in fallback:
             self._transfer_file(task, src, dst, s_src, s_dst, opt,
@@ -1348,6 +1417,17 @@ class TransferService:
         st = fstate.setdefault(spath, {"done": [], "complete": False})
         attempts = 0
         integrity_budget = opt.max_integrity_retries
+        health = self.health
+        ep_ids = (src.resolved_id(), dst.resolved_id())
+        #: endpoint(s) the previous failure was attributed to — whose
+        #: shared retry budget the next attempt must charge
+        blame: tuple[str, ...] | None = None
+        #: model-clock deadline bounding a run of consecutive fast-fail
+        #: denials; ``attempts`` counts only admitted endpoint attempts.
+        #: ``last_progress`` tracks the health registry's transition
+        #: count so the deadline restarts while breakers keep cycling.
+        patience_until: float | None = None
+        last_progress = -1
         while True:
             if task.interrupted():
                 # pause/cancel between attempts: checkpoint progress and
@@ -1355,46 +1435,71 @@ class TransferService:
                 self.markers.append(task.task_id, spath,
                                     self._checkpoint_record(st))
                 return
-            attempts += 1
-            result.attempts = attempts
+            ticket = None
             try:
-                # pipelined per-file command exchange on the control channel
-                self.clock.sleep(opt.file_pipeline_cost)
-                checksum = self._move_one(task, src, dst, s_src, s_dst, opt,
-                                          link, st, spath, dpath, size)
-                if opt.integrity and self._should_verify(spath, opt):
-                    ok = self._verify(dst, s_dst, dpath, checksum, opt,
-                                      digests=st.get("digests"))
-                    if not ok:
-                        task.stats.integrity_failures += 1
-                        task.log(f"integrity mismatch on {dpath}; re-sending")
-                        # un-credit previously-ticked bytes so bytes_done
-                        # can't exceed bytes_total after the re-send
-                        task._bytes_tick(
-                            -sum(ln for _, ln in st.get("done", [])))
-                        st["done"] = []  # full re-send
-                        st["complete"] = False
-                        # the thrown-away bytes' digests must not let a
-                        # later resume skip re-sending them — reset the
-                        # journaled map, not just the in-memory one
-                        st.pop("digests", None)
-                        self.markers.append(task.task_id, spath,
-                                            {"done": [],
-                                             "reset_digests": True})
-                        if integrity_budget <= 0:
-                            raise IntegrityError(dpath)
-                        integrity_budget -= 1
-                        continue
-                result.checksum = checksum
-                result.ok = True
-                st["complete"] = True
-                st["checksum"] = checksum
-                self.markers.append(task.task_id, spath,
-                                    {"done": st["done"], "complete": True,
-                                     "checksum": checksum})
-                task.stats.files_done += 1
-                task.files.append(result)
-                return
+                try:
+                    if health is not None:
+                        # circuit breakers + shared retry budget gate the
+                        # attempt BEFORE any storage op: an open breaker
+                        # or a dry budget denies here (a fast-fail
+                        # EndpointUnavailable) instead of letting the
+                        # fleet keep hammering a sick endpoint
+                        ticket = health.admit(*ep_ids,
+                                              retrying=attempts > 0,
+                                              blame=blame)
+                        if ticket.probe:
+                            task._note_probe()
+                    attempts += 1
+                    result.attempts = attempts
+                    patience_until = None
+                    # pipelined per-file command exchange on the control channel
+                    self.clock.sleep(opt.file_pipeline_cost)
+                    checksum = self._move_one(task, src, dst, s_src, s_dst,
+                                              opt, link, st, spath, dpath,
+                                              size)
+                    if opt.integrity and self._should_verify(spath, opt):
+                        ok = self._verify(dst, s_dst, dpath, checksum, opt,
+                                          digests=st.get("digests"))
+                        if not ok:
+                            task.stats.integrity_failures += 1
+                            task.log(f"integrity mismatch on {dpath}; "
+                                     f"re-sending")
+                            # un-credit previously-ticked bytes so bytes_done
+                            # can't exceed bytes_total after the re-send
+                            task._bytes_tick(
+                                -sum(ln for _, ln in st.get("done", [])))
+                            st["done"] = []  # full re-send
+                            st["complete"] = False
+                            # the thrown-away bytes' digests must not let a
+                            # later resume skip re-sending them — reset the
+                            # journaled map, not just the in-memory one
+                            st.pop("digests", None)
+                            self.markers.append(task.task_id, spath,
+                                                {"done": [],
+                                                 "reset_digests": True})
+                            if integrity_budget <= 0:
+                                raise IntegrityError(dpath)
+                            integrity_budget -= 1
+                            continue
+                    if health is not None:
+                        health.settle(ticket)  # success -> endpoint EWMAs
+                    result.checksum = checksum
+                    result.ok = True
+                    st["complete"] = True
+                    st["checksum"] = checksum
+                    self.markers.append(task.task_id, spath,
+                                        {"done": st["done"], "complete": True,
+                                         "checksum": checksum})
+                    task.stats.files_done += 1
+                    task.files.append(result)
+                    return
+                finally:
+                    if health is not None:
+                        # backstop for attempts exiting unsettled
+                        # (interrupt, permanent error, integrity
+                        # re-send): free any probe slot without judging
+                        # the outcome, so the breaker can probe again
+                        health.release(ticket)
             except TaskInterrupted:
                 # mid-stream pause/cancel: _move_one already folded the
                 # landed ranges (and their segment digests) into ``st``
@@ -1403,12 +1508,53 @@ class TransferService:
                                     self._checkpoint_record(st))
                 return
             except TransientError as e:
+                if health is not None:
+                    health.settle(ticket, e)  # failure -> blamed breaker
                 task._note_fault(e)
-                if attempts > opt.max_retries:
+                if isinstance(e, EndpointUnavailable):
+                    # fast-fail: no storage op happened, so the denial
+                    # does not burn an attempt out of ``max_retries``.
+                    # At REPRO_TIME_SCALE=0 model sleeps are free in
+                    # real time, so a count-based bound here would race
+                    # the probe thread's scheduling; instead bound the
+                    # consecutive-denial wait on the model clock — and
+                    # restart it whenever the health registry records a
+                    # breaker transition (probes cycling = recovery in
+                    # progress; a dead endpoint with a dry budget goes
+                    # quiet and lets the deadline expire).
+                    now = self.clock.virtual_elapsed
+                    progress = (len(health.transitions)
+                                if health is not None else -1)
+                    if patience_until is None or progress != last_progress:
+                        last_progress = progress
+                        patience_until = now + opt.unavailable_patience
+                    if now >= patience_until:
+                        result.error = f"endpoint unavailable: {e}"
+                        break
+                    # wait out the breaker/budget hint, never
+                    # exponential backoff (and keep the previous blame:
+                    # the denial is a symptom of the already-blamed
+                    # endpoint).  Yield the GIL for real: at time
+                    # scale 0 the model sleep below is free, and a
+                    # crowd of denied waiters would otherwise starve
+                    # the one thread holding the half-open probe slot.
+                    time.sleep(0)
+                    backoff = getattr(e, "retry_after", 0.0)
+                elif attempts > opt.max_retries:
                     result.error = f"retries exhausted: {e}"
                     break
-                backoff = max(getattr(e, "retry_after", 0.0),
-                              opt.retry_backoff * (2 ** (attempts - 1)))
+                else:
+                    ep = getattr(e, "endpoint_id", "")
+                    blame = (ep,) if ep in ep_ids else None
+                    # deterministic de-synchronization: hash-seeded
+                    # jitter spreads same-fault batch-mates across
+                    # [0.5x, 1.5x) of the exponential term, so retries
+                    # don't re-converge on the endpoint in lockstep
+                    jitter = 0.5 + _retry_jitter(task.task_id, spath,
+                                                 attempts)
+                    backoff = max(getattr(e, "retry_after", 0.0),
+                                  opt.retry_backoff * (2 ** (attempts - 1))
+                                  * jitter)
                 task.log(f"transient fault on {spath} "
                          f"({type(e).__name__}); retry in {backoff:.2f}s")
                 self.clock.sleep(backoff)
@@ -1548,8 +1694,13 @@ class TransferService:
         st["done"] = tracker.ranges()
         self._fold_digests(st, prior_done, tracker, digester, size)
         if send_err:
+            # health-plane attribution: a read-side fault is the source
+            # endpoint's to answer for (unless the connector already
+            # stamped a culprit)
+            _blame_endpoint(send_err[0], src.resolved_id())
             raise send_err[0]
         if recv_err is not None:
+            _blame_endpoint(recv_err, dst.resolved_id())
             raise recv_err
         if size > 0 and tracker.covered < size:
             # The stream ended short of plan.  Distinguish a source that
@@ -1565,8 +1716,11 @@ class TransferService:
             except PermanentError:
                 now_size = tracker.covered  # source gone: keep what landed
             if now_size > tracker.covered:
-                raise TruncatedStream(
+                err = TruncatedStream(
                     f"{dpath}: {tracker.covered} of {size} bytes landed")
+                # a cut stream is observed at the write side
+                _blame_endpoint(err, dst.resolved_id())
+                raise err
         if opt.integrity and not full:
             # resumed/holey transfer: the streaming hash never saw the
             # whole file — fold the journaled per-range digests (§7

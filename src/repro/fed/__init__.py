@@ -7,17 +7,19 @@ coordinator.
 * :mod:`repro.fed.coordinator` — :class:`FederatedCoordinator`:
   endpoint-ownership placement (owner / least-loaded /
   advisor-predicted-fastest), periodic queue-state digest exchange,
-  task handoff, and site-failure re-homing — all without ever touching
-  file bytes (enforced by the charge-attribution clock).
+  task handoff, site-failure re-homing, a heartbeat monitor that
+  auto-triggers failover from missed digests, and hysteresis-gated
+  proactive rebalancing (:class:`RebalancePolicy`) — all without ever
+  touching file bytes (enforced by the charge-attribution clock).
 """
 
 from .coordinator import (PLACEMENT_POLICIES, FederatedCoordinator,
-                          FedMetrics, QueueDigest, SiteHandle,
-                          StrandedTasksError)
+                          FedMetrics, QueueDigest, RebalancePolicy,
+                          SiteHandle, StrandedTasksError)
 from .spec import SPEC_STATES, TransferSpec
 
 __all__ = [
     "FederatedCoordinator", "FedMetrics", "PLACEMENT_POLICIES",
-    "QueueDigest", "SiteHandle", "SPEC_STATES", "StrandedTasksError",
-    "TransferSpec",
+    "QueueDigest", "RebalancePolicy", "SiteHandle", "SPEC_STATES",
+    "StrandedTasksError", "TransferSpec",
 ]

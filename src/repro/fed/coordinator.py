@@ -18,7 +18,23 @@ would be tallied against it — :meth:`model_seconds` must therefore read
 0.0, and :meth:`assert_third_party` turns that into a hard invariant.
 Data-plane time lands on worker threads that re-bind the charge owner
 to the task, so cross-site stats stay attributed to the originating
-tenant and task, never to the coordinator.
+tenant and task, never to the coordinator.  The coordinator's own
+drain/settle polls advance the *model* clock (never ``time.monotonic``)
+under a sibling ``#wait`` identity, so deadlines are wall-clock-free
+and the invariant still reads 0.0 (see :meth:`wait_seconds`).
+
+Health plane (heartbeats + hysteresis rebalancing)
+--------------------------------------------------
+The existing digest exchange doubles as a **heartbeat** carrier: a site
+whose ``digest()`` call raises has missed a beat, and
+:meth:`FederatedCoordinator.beat` auto-triggers the :meth:`fail_site`
+re-homing path once ``miss_threshold`` consecutive beats are missed —
+no caller intervention.  A :class:`RebalancePolicy` adds a sustained-
+saturation signal with hysteresis (enter/exit thresholds + a minimum
+dwell time over the model clock, plus a per-task move cooldown, so
+specs don't ping-pong) that proactively migrates *queued* specs off
+degrading sites through the same ``export_state``/``import_state``
+handoff the failure path uses.
 """
 
 from __future__ import annotations
@@ -36,6 +52,12 @@ from .spec import TransferSpec
 
 #: built-in placement policy names (see :meth:`FederatedCoordinator._place`)
 PLACEMENT_POLICIES = ("owner", "least-loaded", "advisor")
+
+#: real seconds per idle-wait poll while draining/settling a task
+POLL_REAL = 0.05
+#: model seconds charged (to the coordinator's ``#wait`` identity) per
+#: poll, so drain/settle deadlines advance even at time scale 0
+POLL_MODEL = 0.05
 
 
 class StrandedTasksError(LookupError):
@@ -68,6 +90,9 @@ class QueueDigest:
     in_flight_bytes: int
     #: endpoint id -> active tasks / per-endpoint cap (0.0 if uncapped)
     saturation: dict = field(default_factory=dict)
+    #: endpoint ids whose circuit breaker the site reports as open
+    #: (health plane, :mod:`repro.core.health`)
+    unavailable: list = field(default_factory=list)
 
     @property
     def depth(self) -> int:
@@ -79,11 +104,24 @@ class FedMetrics:
     submissions: int = 0
     handoffs: int = 0
     failovers: int = 0
+    #: failovers triggered by the heartbeat monitor (a strict subset of
+    #: ``failovers``; the rest were caller-invoked ``fail_site``)
+    auto_failovers: int = 0
+    #: queued specs migrated by the hysteresis rebalancer
+    rebalances: int = 0
     digest_exchanges: int = 0
+    #: site_id -> cumulative missed heartbeats (digest() calls that
+    #: raised); reset never — per-site consecutive-miss state lives on
+    #: the SiteHandle
+    heartbeat_misses: dict = field(default_factory=dict)
+    #: task_ids left stranded by heartbeat-driven failovers (the
+    #: auto path swallows StrandedTasksError so one sick site can't
+    #: abort the whole beat — the strandings are recorded here)
+    stranded: list = field(default_factory=list)
     #: site_id -> tasks placed there (initial placements + handoffs in)
     placements: dict = field(default_factory=dict)
     #: (task_id, site_id, reason) in placement order — "submit",
-    #: "handoff", or "failover"
+    #: "handoff", "failover", or "rebalance"
     placement_log: list = field(default_factory=list)
 
 
@@ -98,6 +136,12 @@ class SiteHandle:
         self.owns = set(endpoints if owns is None else owns)
         self.alive = True
         self.digest: QueueDigest | None = None
+        #: consecutive digest exchanges this site failed to answer
+        self.missed_beats = 0
+        #: hysteresis rebalancer state: is the site currently marked hot,
+        #: and since when (model clock) its signal has been >= enter
+        self.hot = False
+        self.hot_since: float | None = None
 
     def resolves(self, spec: TransferSpec) -> bool:
         return (spec.src_endpoint in self.endpoints
@@ -119,6 +163,29 @@ class SiteHandle:
         return c["queued"] + c["running"]
 
 
+@dataclass
+class RebalancePolicy:
+    """Hysteresis knobs for proactive queued-spec migration.
+
+    A site's *signal* is ``max(max endpoint saturation, min(1, queued /
+    queue_norm))`` from its last digest.  The site turns **hot** only
+    after the signal has stayed >= ``enter`` for ``dwell`` model
+    seconds, and stops being hot only once the signal drops <= ``exit``
+    — the enter/exit gap plus the dwell are the hysteresis that keeps
+    borderline sites from flapping.  Each :meth:`FederatedCoordinator.
+    maybe_rebalance` tick moves at most ``max_moves`` queued specs off
+    hot sites (to the least-loaded non-hot candidate below ``enter``),
+    and a spec that just moved is pinned for ``move_cooldown`` model
+    seconds so it cannot ping-pong."""
+
+    enter: float = 0.75
+    exit: float = 0.35
+    dwell: float = 1.0
+    queue_norm: int = 8
+    max_moves: int = 2
+    move_cooldown: float = 5.0
+
+
 class FederatedCoordinator:
     """Routes serialized submissions across registered sites and moves
     live tasks between them.  Never opens a connector session, never
@@ -135,19 +202,30 @@ class FederatedCoordinator:
     """
 
     def __init__(self, placement: str = "owner", name: str = "fed",
-                 digest_every: int = 4):
+                 digest_every: int = 4, miss_threshold: int = 3,
+                 rebalance: RebalancePolicy | None = None):
         self.placement = placement
         #: charge-clock identity all coordinator work is attributed to;
         #: third-party semantics == this owner's tally stays 0.0
         self.charge_owner = f"fed:{name}"
+        #: sibling identity for drain/settle deadline polls: model time
+        #: lands here, visibly, WITHOUT breaking assert_third_party()
+        self.wait_owner = f"fed:{name}#wait"
         #: exchange queue-state digests every this many submissions
         #: (and on demand via :meth:`exchange_digests`)
         self.digest_every = max(1, digest_every)
+        #: consecutive missed heartbeats before :meth:`beat` auto-fails
+        #: a site
+        self.miss_threshold = max(1, miss_threshold)
+        #: hysteresis rebalancing policy (None = reactive failover only)
+        self.rebalance = rebalance
         self.metrics = FedMetrics()
         self._sites: dict[str, SiteHandle] = {}
         self._placements: dict[str, str] = {}      # task_id -> site_id
         self._tasks: dict[str, TransferTask] = {}  # task_id -> live handle
         self._specs: dict[str, TransferSpec] = {}  # last serialized form
+        #: task_id -> model time of its last rebalance move (cooldown)
+        self._moved_at: dict[str, float] = {}
         self._digest_seq = itertools.count(1)
         self._since_exchange = 0
         self._lock = threading.RLock()
@@ -198,13 +276,24 @@ class FederatedCoordinator:
         for site in self._sites.values():
             if not site.alive:
                 continue
-            d = site.manager.digest()
+            try:
+                d = site.manager.digest()
+            except Exception:
+                # the digest stream IS the heartbeat: a site that can't
+                # answer has missed a beat.  Keep its stale digest for
+                # placement until beat() decides it is dead.
+                site.missed_beats += 1
+                misses = self.metrics.heartbeat_misses
+                misses[site.site_id] = misses.get(site.site_id, 0) + 1
+                continue
+            site.missed_beats = 0
             site.digest = QueueDigest(
                 site_id=site.site_id, seq=next(self._digest_seq),
                 queued=d["queued"], running=d["running"],
                 paused=d["paused"],
                 in_flight_bytes=d["in_flight_bytes"],
-                saturation=d["saturation"])
+                saturation=d["saturation"],
+                unavailable=list(d.get("unavailable_endpoints", [])))
             out[site.site_id] = site.digest
         self.metrics.digest_exchanges += 1
         self._since_exchange = 0
@@ -215,6 +304,109 @@ class FederatedCoordinator:
         if self._since_exchange >= self.digest_every \
                 or self.metrics.digest_exchanges == 0:
             self._exchange_locked()
+
+    # ---- heartbeat monitor ----------------------------------------------
+    def beat(self, timeout: float = 30.0) -> list[str]:
+        """One heartbeat tick: exchange digests (a ``digest()`` call
+        that raises is a missed beat), auto-fail any live site at
+        ``miss_threshold`` consecutive misses via the :meth:`fail_site`
+        re-homing path, then run the hysteresis rebalancer if a policy
+        is set.  Returns the site ids failed over on this tick.
+
+        A stranded task on a dead site must not abort the rest of the
+        beat — :class:`StrandedTasksError` is swallowed here and the
+        task ids recorded in ``metrics.stranded`` instead."""
+        with self._lock, charge_to(self.charge_owner):
+            self._exchange_locked()
+            due = [s.site_id for s in self._sites.values()
+                   if s.alive and s.missed_beats >= self.miss_threshold]
+        failed = []
+        for site_id in due:
+            try:
+                self.fail_site(site_id, timeout=timeout)
+            except StrandedTasksError as e:
+                self.metrics.stranded.extend(e.stranded)
+            self.metrics.auto_failovers += 1
+            failed.append(site_id)
+        if self.rebalance is not None:
+            self.maybe_rebalance()
+        return failed
+
+    # ---- hysteresis rebalancing -----------------------------------------
+    @staticmethod
+    def _signal(site: SiteHandle, policy: RebalancePolicy) -> float:
+        """Degradation signal in [0, 1]: the worse of endpoint
+        saturation and normalized queue depth, from the last digest."""
+        d = site.digest
+        if d is None:
+            return 0.0
+        sat = max(d.saturation.values(), default=0.0)
+        return max(sat, min(1.0, d.queued / max(1, policy.queue_norm)))
+
+    def maybe_rebalance(self) -> list[tuple[str, str, str]]:
+        """One rebalancer tick over the last exchanged digests: update
+        each site's hot/cold hysteresis state, then migrate up to
+        ``max_moves`` *queued* specs (never running — their bytes are
+        in flight; never paused — a pause is an operator/failover
+        decision) from hot sites to the least-loaded cold candidate.
+        Returns ``[(task_id, from_site, to_site), ...]``."""
+        policy = self.rebalance
+        if policy is None:
+            return []
+        moved: list[tuple[str, str, str]] = []
+        with self._lock, charge_to(self.charge_owner):
+            live = [s for s in self._sites.values() if s.alive]
+            for s in live:
+                sig = self._signal(s, policy)
+                now = s.manager.service.clock.virtual_elapsed
+                if s.hot:
+                    if sig <= policy.exit:   # hysteresis: exit < enter
+                        s.hot = False
+                        s.hot_since = None
+                elif sig >= policy.enter:
+                    if s.hot_since is None:
+                        s.hot_since = now
+                    if now - s.hot_since >= policy.dwell:
+                        s.hot = True  # sustained, not a blip
+                else:
+                    s.hot_since = None
+            budget = policy.max_moves
+            for site in live:
+                if not site.hot or budget <= 0:
+                    continue
+                now = site.manager.service.clock.virtual_elapsed
+                for tid, sid in list(self._placements.items()):
+                    if budget <= 0:
+                        break
+                    if sid != site.site_id:
+                        continue
+                    task = self._tasks[tid]
+                    if task.status != TransferTask.PENDING:
+                        continue  # queued specs only
+                    last = self._moved_at.get(tid)
+                    if last is not None \
+                            and now - last < policy.move_cooldown:
+                        continue  # anti-ping-pong pin
+                    ref = self._specs.get(tid)
+                    if ref is None:
+                        continue
+                    dests = [c for c in live
+                             if c.site_id != site.site_id and not c.hot
+                             and c.resolves(ref)
+                             and self._signal(c, policy) < policy.enter]
+                    if not dests:
+                        continue
+                    payload = site.manager.export_state(tid)
+                    if payload is None:
+                        continue  # started running since the check
+                    spec = TransferSpec.from_payload(payload)
+                    dest = min(dests, key=lambda s: s.load())
+                    self._import_at_locked(dest, spec, reason="rebalance")
+                    self.metrics.rebalances += 1
+                    self._moved_at[tid] = now
+                    moved.append((tid, site.site_id, dest.site_id))
+                    budget -= 1
+        return moved
 
     # ---- placement -------------------------------------------------------
     def _candidates(self, spec: TransferSpec,
@@ -289,11 +481,23 @@ class FederatedCoordinator:
         return task
 
     # ---- handoff ---------------------------------------------------------
+    def _poll_tick(self, clock, task) -> None:
+        """One drain/settle poll: a short *real* wait for the worker to
+        go idle, then a model-clock step charged to the ``#wait``
+        identity so the model deadline advances even at time scale 0 —
+        and :meth:`assert_third_party` (which audits ``charge_owner``,
+        not the wait sibling) still reads 0.0."""
+        task.wait_idle(POLL_REAL)
+        with charge_to(self.wait_owner):
+            clock.sleep(POLL_MODEL)
+
     def _drain_export(self, site: SiteHandle, task_id: str,
                       timeout: float) -> dict | None:
         """Export a task from ``site``, pausing it first if it is
         running.  ``None`` when the task finished before it could be
-        exported (the handoff lost the race — nothing to move)."""
+        exported (the handoff lost the race — nothing to move).
+        ``timeout`` is MODEL seconds on the site's clock: wall-clock
+        free, like every other deadline in the stack."""
         mgr = site.manager
         payload = mgr.export_state(task_id)
         if payload is not None:
@@ -303,17 +507,18 @@ class FederatedCoordinator:
             task = mgr.get(task_id)
         except KeyError:
             return None
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+        clock = mgr.service.clock
+        deadline = clock.virtual_elapsed + timeout
+        while clock.virtual_elapsed < deadline:
             payload = mgr.export_state(task_id)
             if payload is not None:
                 return payload
             if task._done.is_set():
                 return None  # completed/failed before the pause landed
-            task.wait_idle(0.05)
+            self._poll_tick(clock, task)
         raise TimeoutError(
             f"task {task_id!r} did not drain off {site.site_id!r} "
-            f"within {timeout}s")
+            f"within {timeout} model seconds")
 
     def _precheck_adoption(self, task_id: str, origin_id: str,
                            to_site: str | None) -> None:
@@ -331,25 +536,26 @@ class FederatedCoordinator:
         else:
             self._candidates(ref, exclude=origin_id)
 
-    @staticmethod
-    def _await_settled(site: SiteHandle, task_id: str,
+    def _await_settled(self, site: SiteHandle, task_id: str,
                        timeout: float) -> None:
         """Wait until ``task_id`` has no run loop (paused checkpoint
-        durable, charge bookkeeping complete) or finished."""
+        durable, charge bookkeeping complete) or finished.  ``timeout``
+        is MODEL seconds on the site's clock."""
         mgr = site.manager
         try:
             task = mgr.get(task_id)
         except KeyError:
             return
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+        clock = mgr.service.clock
+        deadline = clock.virtual_elapsed + timeout
+        while clock.virtual_elapsed < deadline:
             if task._done.is_set() or (task.status == TransferTask.PAUSED
                                        and mgr.settled(task_id)):
                 return
-            task.wait_idle(0.05)
+            self._poll_tick(clock, task)
         raise TimeoutError(
             f"task {task_id!r} did not settle on {site.site_id!r} "
-            f"within {timeout}s")
+            f"within {timeout} model seconds")
 
     def handoff(self, task_id: str, to_site: str | None = None,
                 timeout: float = 30.0) -> TransferTask | None:
@@ -500,6 +706,18 @@ class FederatedCoordinator:
                 clock = site.manager.service.clock
                 clocks[id(clock)] = clock
         return sum(c.charged(self.charge_owner) for c in clocks.values())
+
+    def wait_seconds(self) -> float:
+        """Model time spent polling drain/settle deadlines, across every
+        site's clock.  Charged to the ``#wait`` sibling identity — it is
+        coordination overhead, observable here, and deliberately NOT a
+        third-party violation: no data-plane byte ever moves under it."""
+        clocks = {}
+        with self._lock:
+            for site in self._sites.values():
+                clock = site.manager.service.clock
+                clocks[id(clock)] = clock
+        return sum(c.charged(self.wait_owner) for c in clocks.values())
 
     def assert_third_party(self) -> None:
         charged = self.model_seconds()

@@ -22,10 +22,10 @@ scenario with seconds of injected latency still finishes instantly under
 sequence into the same ``TaskStats``.
 """
 
-from .scenarios import (ROUTES, TREES, FederatedScenarioResult,
-                        MultiScenarioResult, ScenarioResult, ScenarioRunner,
-                        canonical_tree)
+from .scenarios import (ROUTES, TREES, DegradedScenarioResult,
+                        FederatedScenarioResult, MultiScenarioResult,
+                        ScenarioResult, ScenarioRunner, canonical_tree)
 
-__all__ = ["ROUTES", "TREES", "FederatedScenarioResult",
-           "MultiScenarioResult", "ScenarioResult", "ScenarioRunner",
-           "canonical_tree"]
+__all__ = ["ROUTES", "TREES", "DegradedScenarioResult",
+           "FederatedScenarioResult", "MultiScenarioResult",
+           "ScenarioResult", "ScenarioRunner", "canonical_tree"]

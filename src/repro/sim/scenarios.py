@@ -34,7 +34,8 @@ from typing import Callable
 from ..connectors import (MemoryConnector, ObjectStoreConnector,
                           PosixConnector, make_cloud)
 from ..connectors.faultproxy import FaultProxyConnector
-from ..core import (Credential, CredentialStore, Endpoint, RouteCandidate,
+from ..core import (ConnectorError, Credential, CredentialStore, Endpoint,
+                    EndpointHealth, HealthConfig, RouteCandidate,
                     TransferManager, TransferOptions, TransferService)
 from ..core.clock import Clock
 from ..core.faults import FaultSchedule
@@ -348,6 +349,26 @@ class _HoldSrc:
             return None if ch is None else self._held(path, ch)
 
         self.inner.send_batch(session, paths, factory)
+
+
+class _FlakyDigest:
+    """Site-manager proxy whose ``digest()`` raises while ``down`` is
+    set — the heartbeat-miss injection for flapping-site scenarios.
+    Every other call forwards to the real manager, so the site's data
+    plane keeps working while its control channel looks dead (exactly
+    the partition the heartbeat monitor must not over-react to)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.down = threading.Event()
+
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+    def digest(self):
+        if self.down.is_set():
+            raise ConnectorError("site unreachable: digest poll failed")
+        return self.inner.digest()
 
 
 # --------------------------------------------------------------------------
@@ -911,6 +932,435 @@ class ScenarioRunner:
                 + "\n  ".join(violations))
         return result
 
+    # ---- degraded-mode scenarios (health plane) --------------------------
+    def run_degraded(self, mode: str = "brownout",
+                     n_tasks: int | None = None,
+                     health: HealthConfig | None = None, storm: int = 6,
+                     miss_threshold: int = 3, victim: int = 1,
+                     seed: int = 0, timeout: float = 240.0,
+                     strict: bool = False) -> "DegradedScenarioResult":
+        """Run the fleet against *degrading* (not just failing) storage
+        and assert the health plane's contract.  Three modes:
+
+        * ``"brownout"`` — the destination endpoint fails every recv for
+          a bounded global storm, then recovers.  The breaker must open
+          on the error burst, hold the fleet off with fast-fail
+          :class:`~repro.core.EndpointUnavailable` denials, probe
+          half-open, re-open while the storm lasts, close on the first
+          probe that succeeds — and every task must still finish
+          byte-exact.  Both ``"EndpointUnavailable"`` and
+          ``"HalfOpenProbe"`` must appear in the fleet's
+          ``retries_by_kind`` (the taxonomy is observable).
+        * ``"death"`` — the destination endpoint is permanently dead.
+          A 20-task fleet through one :class:`TransferManager` must
+          finish (FAILED, never wedged) with total storage attempts
+          bounded by the shared retry budget — O(budget), not
+          O(n_tasks * max_retries): no retry storm.
+        * ``"flapping-site"`` — a federation site's digest channel flaps
+          below ``miss_threshold`` consecutive misses (no failover may
+          fire), then goes permanently dark: the heartbeat monitor in
+          :meth:`~repro.fed.FederatedCoordinator.beat` must auto-invoke
+          the failover path (the caller never calls ``fail_site``),
+          re-homed tasks must finish byte-exact with write-once
+          destination bytes, and the coordinator must stay zero-charge.
+        """
+        with self._lock:
+            self._n += 1
+            run_dir = os.path.join(self.base_dir, f"deg{self._n:03d}")
+        os.makedirs(run_dir, exist_ok=True)
+
+        if mode == "brownout":
+            return self._degraded_endpoint(
+                run_dir, mode, n_tasks or 4, health, storm, seed, timeout,
+                strict)
+        if mode == "death":
+            return self._degraded_endpoint(
+                run_dir, mode, n_tasks or 20, health, storm, seed, timeout,
+                strict)
+        if mode == "flapping-site":
+            return self._degraded_federation(
+                run_dir, n_tasks or 4, miss_threshold, victim, seed,
+                timeout, strict)
+        raise ValueError(f"unknown degraded mode {mode!r}")
+
+    def _degraded_endpoint(self, run_dir: str, mode: str, n: int,
+                           health: HealthConfig | None, storm: int,
+                           seed: int, timeout: float,
+                           strict: bool) -> "DegradedScenarioResult":
+        """Brownout / permanent-death of the destination endpoint."""
+        if mode == "brownout":
+            cfg = health or HealthConfig(
+                error_threshold=0.5, ewma_alpha=0.6, min_samples=2,
+                cooldown=0.15, probe_successes=1,
+                retry_budget_rate=2.0, retry_budget_capacity=12.0)
+            schedule = FaultSchedule(seed=seed).brownout(storm, op="recv*")
+            #: real (admitted) attempts only — fast-fail denials are
+            #: bounded by ``unavailable_patience`` on the model clock,
+            #: not by this count
+            max_retries = 12
+            files_per_task = 2
+            #: unbounded: a brownout ends by construction (the storm is
+            #: a finite ``times=storm``), and this scenario's invariant
+            #: is that NO task gives up — give-up behavior is the death
+            #: mode's test.  At time-scale 0 the waiter crowd's denial
+            #: sleeps advance the shared model clock arbitrarily fast
+            #: relative to thread scheduling, so any finite patience
+            #: here would be a scheduling race.
+            patience = float("inf")
+        else:
+            cfg = health or HealthConfig(
+                error_threshold=0.5, ewma_alpha=0.4, min_samples=3,
+                cooldown=0.05, probe_successes=1,
+                retry_budget_rate=0.0, retry_budget_capacity=4.0)
+            schedule = FaultSchedule(seed=seed).dead_endpoint(op="recv*")
+            max_retries = 6
+            files_per_task = 1
+            #: a dead endpoint never recovers: give up on fast-fail
+            #: denials after a short model-clock wait so the fleet
+            #: drains FAILED instead of waiting out a long patience
+            patience = 2.0
+        schedule.clock = self.clock
+
+        src_inner = MemoryConnector()
+        per_task_files: list[dict[str, bytes]] = []
+        for i in range(n):
+            rng = random.Random(f"degraded|{seed}|{i}")
+            files = {f"{SRC_ROOT}/t{i}/f{k}.bin":
+                     rng.randbytes(rng.randint(1 * KB, 2 * KB))
+                     for k in range(files_per_task)}
+            per_task_files.append(files)
+            for name, data in files.items():
+                src_inner.store.put(name, data)
+        dst_inner = MemoryConnector()
+        dst_conn = FaultProxyConnector(dst_inner, schedule)
+
+        creds = CredentialStore()
+        for ep_id in ("src-ep", "dst-ep"):
+            creds.register(ep_id, Credential("local-user", {"token": "t"}))
+        hp = EndpointHealth(cfg, clock=self.clock)
+        # batching off: the per-file path's admit() gate is the budget
+        # enforcement under test
+        options = TransferOptions(
+            startup_cost=0.0, retry_backoff=0.01, concurrency=2,
+            max_retries=max_retries, coalesce_threshold=0,
+            unavailable_patience=patience)
+
+        per_endpoint_cap = 2
+        manager = None
+        if mode == "death":
+            # the fleet goes through ONE control plane: dispatch must
+            # defer around the open breaker and never wedge
+            options.concurrency = 1
+            manager = TransferManager(
+                max_workers=4, per_endpoint_cap=per_endpoint_cap,
+                credential_store=creds,
+                marker_root=os.path.join(run_dir, "markers"),
+                clock=self.clock, health=hp)
+            submit = manager.submit
+            service = manager.service
+        else:
+            service = TransferService(
+                credential_store=creds,
+                marker_root=os.path.join(run_dir, "markers"),
+                clock=self.clock, health=hp)
+            submit = service.submit
+
+        tasks = []
+        for i in range(n):
+            tasks.append(submit(
+                Endpoint(src_inner, f"{SRC_ROOT}/t{i}", "src-ep"),
+                Endpoint(dst_conn, f"{DST_ROOT}/t{i}", "dst-ep"),
+                options, task_id=f"deg-{mode}-t{i}"))
+        if manager is not None:
+            finished = manager.wait_all(timeout=timeout)
+        else:
+            finished = all(t.wait(timeout=timeout) for t in tasks)
+
+        pfx = DST_ROOT + "/"
+        dest_all = {k[len(pfx):]: dst_inner.store.get(k)
+                    for k in dst_inner.store.keys() if k.startswith(pfx)}
+
+        results: list[ScenarioResult] = []
+        violations: list[str] = []
+        for i, task in enumerate(tasks):
+            tp = f"t{i}/"
+            expected = {name[len(SRC_ROOT) + 1:]: data
+                        for name, data in per_task_files[i].items()}
+            dest = {k: v for k, v in dest_all.items() if k.startswith(tp)}
+            task_done = task._done.is_set()
+            markers_after = service.markers.load(task.task_id) \
+                if task_done else {"files": {"unfinished": True}}
+            v = check_invariants(task, expected, dest, schedule,
+                                 markers_after, task_done, options.integrity)
+            results.append(ScenarioResult(
+                task=task, schedule=schedule, expected=expected, dest=dest,
+                violations=v, route=f"degraded:{mode}", tree="degraded"))
+            violations.extend(f"task {i}: {x}" for x in v)
+
+        if not finished:
+            violations.append(f"wedged: the {mode} fleet did not finish "
+                              f"within the timeout")
+        agg: dict[str, int] = {}
+        for t in tasks:
+            for k, c in t.stats.retries_by_kind.items():
+                agg[k] = agg.get(k, 0) + c
+        names = hp.transition_names("dst-ep")
+        attempts = schedule.count("transient")
+
+        if mode == "brownout":
+            for i, t in enumerate(tasks):
+                if t.status != t.SUCCEEDED:
+                    violations.append(
+                        f"task {i} ended {t.status} — a brownout (bounded "
+                        f"storm) must not fail the fleet")
+            if not names or names[0] != "closed->open":
+                violations.append(
+                    f"breaker never opened on the error burst: {names}")
+            elif names[-1] != "half-open->closed":
+                violations.append(
+                    f"breaker did not close after recovery: {names}")
+            if not agg.get("EndpointUnavailable"):
+                violations.append("no EndpointUnavailable fast-fail was "
+                                  "recorded: the fleet hammered the sick "
+                                  "endpoint through the open breaker")
+            if not agg.get("HalfOpenProbe"):
+                violations.append("no half-open probe was recorded: the "
+                                  "breaker cannot have closed legally")
+        else:  # death
+            for i, t in enumerate(tasks):
+                if t.status == t.SUCCEEDED and t.stats.bytes_total > 0:
+                    violations.append(
+                        f"task {i} SUCCEEDED against a dead endpoint")
+            # O(budget) bound: pre-open evidence window + concurrent
+            # in-flight attempts + budget-funded probes + slack — NOT
+            # O(n_tasks * max_retries)
+            bound = (cfg.min_samples + per_endpoint_cap
+                     + int(cfg.retry_budget_capacity) + 2)
+            if attempts > bound:
+                violations.append(
+                    f"retry storm: {attempts} storage attempts against "
+                    f"the dead endpoint, budget bound is {bound}")
+            if attempts >= n * (max_retries + 1):
+                violations.append(
+                    f"unbounded retries: {attempts} >= "
+                    f"n_tasks*max_retries = {n * (max_retries + 1)}")
+            if not names or names[0] != "closed->open":
+                violations.append(
+                    f"breaker never opened on the dead endpoint: {names}")
+            if not agg.get("EndpointUnavailable"):
+                violations.append("no fast-fail denials recorded against "
+                                  "the dead endpoint")
+        if manager is not None:
+            manager.shutdown(wait=False)
+
+        result = DegradedScenarioResult(
+            mode=mode, results=results, health=hp, schedule=schedule,
+            transitions=names, attempts=attempts, retries_by_kind=agg,
+            violations=violations)
+        if strict and violations:
+            raise AssertionError(
+                f"degraded scenario ({mode}) violated invariants:\n  "
+                + "\n  ".join(violations))
+        return result
+
+    def _degraded_federation(self, run_dir: str, n_tasks: int,
+                             miss_threshold: int, victim: int, seed: int,
+                             timeout: float,
+                             strict: bool) -> "DegradedScenarioResult":
+        """Flapping then permanently-dark federation site: heartbeat
+        misses below threshold must NOT fail the site; sustained misses
+        must auto-trigger failover with no caller ``fail_site``."""
+        n_sites = 2
+        victim_site = f"s{victim % n_sites}"
+
+        src_inners = [MemoryConnector() for _ in range(n_sites)]
+        per_task_files: list[dict[str, bytes]] = []
+        specs: list[TransferSpec] = []
+        for j in range(n_tasks):
+            rng = random.Random(f"degraded-fed|{seed}|{j}")
+            files = {f"{SRC_ROOT}/t{j}/f{k}.bin":
+                     rng.randbytes(rng.randint(4 * KB, 8 * KB))
+                     for k in range(3)}
+            per_task_files.append(files)
+            store = src_inners[j % n_sites].store
+            for name, data in files.items():
+                store.put(name, data)
+
+        src_conns: list = list(src_inners)
+        # gate the victim's source streams so at least one of its tasks
+        # is genuinely mid-flight when the site goes dark (same idiom as
+        # run_federated)
+        hold = _HoldSrc(src_conns[victim % n_sites])
+        src_conns[victim % n_sites] = hold
+        hold.arm_hold([SRC_ROOT + "/"], 2048)
+        dst_inner = MemoryConnector()
+        dst_conn = _InstrumentedDst(dst_inner)
+
+        endpoints = {f"src-s{i}": src_conns[i] for i in range(n_sites)}
+        endpoints["dst-ep"] = dst_conn
+        coord = FederatedCoordinator(placement="owner",
+                                     miss_threshold=miss_threshold)
+        flaky: _FlakyDigest | None = None
+        for i in range(n_sites):
+            creds = CredentialStore()
+            creds.register(f"src-s{i}", Credential(
+                "local-user", {"identity": "alice"}))
+            manager = TransferManager(
+                max_workers=3, per_endpoint_cap=None,
+                credential_store=creds,
+                marker_root=os.path.join(run_dir, f"site{i}", "markers"),
+                clock=self.clock, site_id=f"s{i}")
+            handle = manager
+            if i == victim % n_sites:
+                flaky = _FlakyDigest(manager)
+                handle = flaky
+            coord.register_site(f"s{i}", handle, endpoints,
+                                owns={f"src-s{i}"}
+                                | ({"dst-ep"} if i == 0 else set()))
+
+        options = TransferOptions(
+            startup_cost=0.0, retry_backoff=0.01, concurrency=2)
+        victim_ids: list[str] = []
+        for j in range(n_tasks):
+            spec = TransferSpec.new(
+                f"deg-fed-t{j}",
+                f"src-s{j % n_sites}", f"{SRC_ROOT}/t{j}",
+                "dst-ep", f"{DST_ROOT}/t{j}",
+                tenant="alice", options=options,
+                n_files=len(per_task_files[j]),
+                nbytes=sum(len(d) for d in per_task_files[j].values()))
+            specs.append(spec)
+            if j % n_sites == victim % n_sites:
+                victim_ids.append(spec.task_id)
+            coord.submit(spec.to_json())
+
+        violations: list[str] = []
+        import time as _time
+        if not hold.engaged.wait(timeout=min(60.0, timeout)):
+            violations.append("hold never engaged: the victim site had "
+                              "no mid-flight task to strand")
+            hold.release()
+
+        # phase 1: flap BELOW the threshold — no failover may fire
+        flaky.down.set()
+        for _ in range(miss_threshold - 1):
+            coord.beat(timeout=timeout)
+        flaky.down.clear()
+        coord.beat(timeout=timeout)  # recovery beat resets the misses
+        vh = coord.sites()[victim_site]
+        if coord.metrics.auto_failovers or not vh.alive:
+            violations.append(
+                "flapping below miss_threshold triggered a failover: "
+                "the monitor has no hysteresis")
+        if vh.missed_beats != 0:
+            violations.append(
+                f"recovered heartbeat did not reset the miss counter "
+                f"({vh.missed_beats} != 0)")
+
+        # phase 2: permanently dark — beat() must auto-fail the site.
+        # The releaser frees the held streams only once every victim
+        # task has its pause landed (or finished), so the traveled
+        # checkpoint is guaranteed mid-flight.
+        flaky.down.set()
+        victim_tasks = [coord.task(tid) for tid in victim_ids]
+
+        def do_release():
+            t_end = _time.monotonic() + min(60.0, timeout)
+            while _time.monotonic() < t_end:
+                if all(t._done.is_set() or t._pause_req.is_set()
+                       or t.status == t.PAUSED for t in victim_tasks):
+                    break
+                _time.sleep(0.005)
+            hold.release()
+
+        releaser = threading.Thread(target=do_release, daemon=True)
+        releaser.start()
+        t0 = self.clock.virtual_elapsed
+        failed_sites: list[str] = []
+        for _ in range(miss_threshold + 2):
+            failed_sites = coord.beat(timeout=timeout)
+            if failed_sites:
+                break
+        failover_model_s = self.clock.virtual_elapsed - t0
+        releaser.join(timeout=min(60.0, timeout))
+
+        finished = coord.wait_all(timeout=timeout)
+        pfx = DST_ROOT + "/"
+        dest_all = {k[len(pfx):]: dst_inner.store.get(k)
+                    for k in dst_inner.store.keys()
+                    if k.startswith(pfx)} if finished else {}
+
+        moved = [(tid, sid) for tid, sid, reason
+                 in coord.metrics.placement_log if reason == "failover"]
+        results: list[ScenarioResult] = []
+        for j, spec in enumerate(specs):
+            task = coord.task(spec.task_id)
+            site_id = coord.site_of(spec.task_id)
+            mgr = coord.sites()[site_id].manager
+            tp = f"t{j}/"
+            expected = {name[len(SRC_ROOT) + 1:]: data
+                        for name, data in per_task_files[j].items()}
+            dest = {k: v for k, v in dest_all.items() if k.startswith(tp)}
+            task_done = finished and task._done.is_set()
+            markers_after = mgr.service.markers.load(spec.task_id) \
+                if task_done else {"files": {"unfinished": True}}
+            v = check_invariants(task, expected, dest, None,
+                                 markers_after, task_done,
+                                 options.integrity)
+            results.append(ScenarioResult(
+                task=task, schedule=None, expected=expected, dest=dest,
+                violations=v, route=f"fed:{site_id}", tree="degraded"))
+            violations.extend(f"task {j}: {x}" for x in v)
+
+        if not finished:
+            violations.append("wedged: the federation did not finish "
+                              "within the timeout")
+        if failed_sites != [victim_site]:
+            violations.append(
+                f"heartbeat monitor failed over {failed_sites!r}, "
+                f"expected [{victim_site!r}]")
+        if coord.metrics.auto_failovers != 1:
+            violations.append(
+                f"auto_failovers = {coord.metrics.auto_failovers}, "
+                f"expected exactly 1 (heartbeat-driven)")
+        if coord.sites()[victim_site].alive:
+            violations.append("victim site still alive after sustained "
+                              "heartbeat loss")
+        if hold.engaged.is_set() and not moved:
+            violations.append("auto-failover re-homed no tasks (all "
+                              "finished before the site went dark?)")
+        if coord.metrics.stranded:
+            violations.append(
+                f"auto-failover stranded {coord.metrics.stranded!r}")
+        for j, spec in enumerate(specs):
+            task = coord.task(spec.task_id)
+            if task.status != task.SUCCEEDED:
+                violations.append(f"task {j} ended {task.status} after "
+                                  f"auto-failover")
+            elif finished and not options.integrity:
+                written = dst_conn.written(f"{DST_ROOT}/t{j}/")
+                if written != task.stats.bytes_total:
+                    violations.append(
+                        f"task {j}: {written} bytes written for a "
+                        f"{task.stats.bytes_total} byte tree — failover "
+                        f"must re-send only the holes")
+        try:
+            coord.assert_third_party()
+        except AssertionError as e:
+            violations.append(str(e))
+
+        coord.shutdown(wait=False)
+        result = DegradedScenarioResult(
+            mode="flapping-site", results=results, health=None,
+            schedule=None, coordinator=coord, moved=moved,
+            failover_model_seconds=failover_model_s,
+            violations=violations)
+        if strict and violations:
+            raise AssertionError(
+                "degraded scenario (flapping-site) violated invariants:"
+                "\n  " + "\n  ".join(violations))
+        return result
+
 
 @dataclass
 class MultiScenarioResult:
@@ -937,6 +1387,38 @@ class FederatedScenarioResult:
     coordinator: FederatedCoordinator
     #: (task_id, new_site_id) for every task the site failure re-homed
     moved: list = field(default_factory=list)
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def tasks(self):
+        return [r.task for r in self.results]
+
+
+@dataclass
+class DegradedScenarioResult:
+    """Outcome of :meth:`ScenarioRunner.run_degraded`."""
+
+    mode: str
+    results: list[ScenarioResult]
+    #: the shared health registry (endpoint modes; None for fed mode)
+    health: EndpointHealth | None
+    schedule: FaultSchedule | None
+    coordinator: FederatedCoordinator | None = None
+    #: (task_id, new_site_id) re-homed by the heartbeat-driven failover
+    moved: list = field(default_factory=list)
+    #: breaker transition names for the sick endpoint, in order
+    transitions: list = field(default_factory=list)
+    #: storage-level fault firings against the sick endpoint (the
+    #: number the shared retry budget bounds)
+    attempts: int = 0
+    #: fleet-aggregated ``TaskStats.retries_by_kind``
+    retries_by_kind: dict = field(default_factory=dict)
+    #: model seconds from the first dark beat to the automatic failover
+    failover_model_seconds: float = 0.0
     violations: list[str] = field(default_factory=list)
 
     @property

@@ -1,0 +1,317 @@
+"""Health-plane unit tests: EndpointHealth breaker state machine,
+shared retry budgets, probe-slot discipline, jittered backoff, and the
+data/control-plane wiring (ISSUE 6 tentpole).
+
+All breaker tests drive a private model Clock(scale=0) from the test
+thread, so every transition sequence is exactly deterministic.  The
+budget-bound property uses hypothesis when available (tier1 profile in
+conftest.py) and a fixed seed sweep otherwise."""
+
+import random
+
+import pytest
+
+from repro.connectors import FaultProxyConnector, MemoryConnector
+from repro.core import (Credential, CredentialStore, Endpoint,
+                        EndpointHealth, EndpointUnavailable, FaultSchedule,
+                        HealthConfig, TransferManager, TransferOptions,
+                        TransferService, TransientError)
+from repro.core.clock import Clock
+from repro.core.health import CLOSED, HALF_OPEN, OPEN
+from repro.core.transfer import _retry_jitter
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KB = 1024
+
+
+def mk_health(**kw) -> tuple[EndpointHealth, Clock]:
+    clock = Clock(scale=0.0)
+    return EndpointHealth(HealthConfig(**kw), clock=clock), clock
+
+
+# ---------------------------------------------------------------------------
+# breaker state machine
+# ---------------------------------------------------------------------------
+def test_breaker_opens_only_after_min_samples():
+    hp, _ = mk_health(error_threshold=0.5, ewma_alpha=0.5, min_samples=3)
+    hp.record_failure("ep")
+    hp.record_failure("ep")           # ewma 0.75 >= 0.5, but samples 2 < 3
+    assert hp.state("ep") == CLOSED
+    hp.record_failure("ep")
+    assert hp.state("ep") == OPEN
+    assert hp.transition_names("ep") == ["closed->open"]
+
+
+def test_open_denies_with_cooldown_hint():
+    hp, _ = mk_health(min_samples=1, ewma_alpha=1.0, cooldown=2.0)
+    hp.record_failure("ep")
+    assert hp.state("ep") == OPEN
+    with pytest.raises(EndpointUnavailable) as ei:
+        hp.admit("ep")
+    assert ei.value.reason == "breaker-open"
+    assert ei.value.endpoint_id == "ep"
+    assert 0.0 < ei.value.retry_after <= 2.0
+    assert hp.denials["ep"] == 1
+    # non-mutating queries agree and do not transition anything
+    assert not hp.available("ep")
+    assert hp.denied("ep") is not None
+    assert hp.unavailable() == ["ep"]
+    assert hp.transition_names("ep") == ["closed->open"]
+
+
+def test_half_open_admits_exactly_one_probe_then_closes():
+    hp, clock = mk_health(min_samples=1, ewma_alpha=1.0, cooldown=1.0,
+                          probe_successes=1)
+    hp.record_failure("ep")
+    clock.sleep(1.0)                  # cooldown elapsed on the model clock
+    assert hp.available("ep")         # the next attempt would be the probe
+    t = hp.admit("ep")
+    assert t.probe
+    assert hp.state("ep") == HALF_OPEN
+    with pytest.raises(EndpointUnavailable) as ei:
+        hp.admit("ep")                # second attempt: probe slot is taken
+    assert ei.value.reason == "probe-in-flight"
+    hp.settle(t)                      # probe succeeded
+    assert hp.state("ep") == CLOSED
+    assert hp.transition_names("ep") == [
+        "closed->open", "open->half-open", "half-open->closed"]
+    # recovery resets the evidence window: one new failure is not enough
+    # to re-open even though ewma_alpha=1.0 (min_samples must re-accrue)
+    hp2, clock2 = mk_health(min_samples=2, ewma_alpha=1.0, cooldown=1.0)
+    hp2.record_failure("ep")
+    hp2.record_failure("ep")
+    clock2.sleep(1.0)
+    hp2.settle(hp2.admit("ep"))       # probe ok -> closed, fresh window
+    hp2.record_failure("ep")          # samples 1 < min_samples 2
+    assert hp2.state("ep") == CLOSED
+
+
+def test_failed_probe_reopens_with_fresh_cooldown():
+    hp, clock = mk_health(min_samples=1, ewma_alpha=1.0, cooldown=1.0)
+    hp.record_failure("ep")
+    clock.sleep(1.0)
+    t = hp.admit("ep")
+    err = TransientError("probe failed")
+    err.endpoint_id = "ep"
+    hp.settle(t, err)
+    assert hp.state("ep") == OPEN
+    with pytest.raises(EndpointUnavailable):      # cooldown restarted
+        hp.admit("ep")
+    assert hp.transition_names("ep") == [
+        "closed->open", "open->half-open", "half-open->open"]
+
+
+def test_release_frees_probe_slot_without_judging():
+    hp, clock = mk_health(min_samples=1, ewma_alpha=1.0, cooldown=1.0)
+    hp.record_failure("ep")
+    clock.sleep(1.0)
+    t = hp.admit("ep")
+    before = hp.transition_names("ep")
+    hp.release(t)                     # e.g. the attempt was interrupted
+    # no outcome was recorded, but the slot is free for the next probe
+    assert hp.transition_names("ep") == before
+    t2 = hp.admit("ep")
+    assert t2.probe
+
+
+def test_settle_is_idempotent_and_none_safe():
+    hp, _ = mk_health(min_samples=10)
+    hp.settle(None)                   # admit raised before a ticket existed
+    t = hp.admit("ep")
+    hp.settle(t)
+    hp.settle(t, TransientError("late"))   # second settle must not count
+    hp.release(t)
+    snap = hp.snapshot()["ep"]
+    assert snap["samples"] == 1 and snap["error_rate"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# retry budget
+# ---------------------------------------------------------------------------
+def test_budget_exhausts_and_refills_on_model_clock():
+    hp, clock = mk_health(min_samples=99, retry_budget_rate=1.0,
+                          retry_budget_capacity=2.0)
+    hp.settle(hp.admit("ep", retrying=True))       # 1 token
+    hp.settle(hp.admit("ep", retrying=True))       # 2nd token
+    with pytest.raises(EndpointUnavailable) as ei:
+        hp.admit("ep", retrying=True)
+    assert ei.value.reason == "retry-budget"
+    clock.sleep(1.0)                               # refill 1 token
+    hp.settle(hp.admit("ep", retrying=True))
+
+
+def test_budget_rate_zero_is_a_hard_lifetime_cap():
+    hp, clock = mk_health(min_samples=99, retry_budget_rate=0.0,
+                          retry_budget_capacity=1.0)
+    hp.settle(hp.admit("ep", retrying=True))
+    clock.sleep(1000.0)                            # no refill, ever
+    with pytest.raises(EndpointUnavailable) as ei:
+        hp.admit("ep", retrying=True)
+    assert ei.value.reason == "retry-budget"
+
+
+def test_first_attempt_is_budget_free_and_blame_restricts_charge():
+    hp, _ = mk_health(min_samples=99, retry_budget_rate=0.0,
+                      retry_budget_capacity=1.0)
+    for _ in range(5):                             # first attempts are free
+        hp.settle(hp.admit("a", "b", retrying=False))
+    assert hp.snapshot()["a"]["tokens"] == 1.0
+    # a blamed retry charges ONLY the blamed endpoint's bucket
+    hp.settle(hp.admit("a", "b", retrying=True, blame=("b",)))
+    snap = hp.snapshot()
+    assert snap["a"]["tokens"] == 1.0 and snap["b"]["tokens"] == 0.0
+
+
+def test_batch_failure_blames_the_named_endpoint_only():
+    hp, _ = mk_health(min_samples=1, ewma_alpha=1.0)
+    err = TransientError("recv blew up")
+    err.endpoint_id = "dst"
+    hp.record_failure("src", "dst", error=err)
+    assert hp.state("dst") == OPEN
+    assert hp.state("src") == CLOSED
+    assert hp.error_rate("src") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# deterministic jittered backoff (satellite: retry de-synchronization)
+# ---------------------------------------------------------------------------
+def test_retry_jitter_is_deterministic_and_spread():
+    a = _retry_jitter("task-1", "dir/f.bin", 3)
+    assert a == _retry_jitter("task-1", "dir/f.bin", 3)   # pure function
+    vals = [_retry_jitter("task-1", f"f{i}.bin", 1) for i in range(32)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert len(set(vals)) > 16        # batch-mates actually de-synchronize
+    assert _retry_jitter("task-1", "f.bin", 1) \
+        != _retry_jitter("task-1", "f.bin", 2)
+
+
+# ---------------------------------------------------------------------------
+# data-plane integration: fast-fails vs real attempts
+# ---------------------------------------------------------------------------
+def test_dead_endpoint_fast_fails_without_burning_attempts(tmp_path):
+    clock = Clock(scale=0.0)
+    schedule = FaultSchedule(seed=7, clock=clock).dead_endpoint(op="recv*")
+    src = MemoryConnector()
+    for k in range(3):
+        src.store.put(f"data/f{k}.bin", bytes(1 * KB))
+    dst = FaultProxyConnector(MemoryConnector(), schedule)
+    creds = CredentialStore()
+    creds.register("src-ep", Credential("u", {}))
+    creds.register("dst-ep", Credential("u", {}))
+    hp = EndpointHealth(
+        HealthConfig(min_samples=2, ewma_alpha=0.6, cooldown=0.05,
+                     retry_budget_rate=0.0, retry_budget_capacity=2.0),
+        clock=clock)
+    svc = TransferService(credential_store=creds,
+                          marker_root=str(tmp_path / "m"),
+                          clock=clock, health=hp)
+    opt = TransferOptions(startup_cost=0.0, retry_backoff=0.01,
+                          concurrency=1, max_retries=3,
+                          coalesce_threshold=0, unavailable_patience=0.5)
+    task = svc.submit(Endpoint(src, "data", "src-ep"),
+                      Endpoint(dst, "out", "dst-ep"), opt,
+                      task_id="dead-ep")
+    assert task.wait(timeout=120)
+    assert task.status == task.FAILED
+    kinds = task.stats.retries_by_kind
+    # probes and fast-fail denials are counted as DISTINCT kinds, and
+    # both are distinct from the real injected faults
+    assert kinds.get("EndpointUnavailable", 0) > 0
+    assert kinds.get("FaultInjected", 0) > 0
+    assert hp.transition_names("dst-ep")[0] == "closed->open"
+    # O(budget): storage was touched far fewer times than the naive
+    # 3 files * (max_retries+1) = 12
+    assert schedule.count("transient") <= 2 + 2 + 2
+    # files behind the open breaker give up on patience, not retries —
+    # and at least one was denied from its very first attempt (zero
+    # admitted attempts: denials never burn max_retries)
+    starved = [f for f in task.files
+               if f.error and f.error.startswith("endpoint unavailable")]
+    assert starved and any(f.attempts == 0 for f in starved)
+    assert all(f.attempts <= opt.max_retries + 1 for f in task.files)
+
+
+def test_manager_liveness_and_digest_with_open_breaker(tmp_path):
+    clock = Clock(scale=0.0)
+    schedule = FaultSchedule(seed=9, clock=clock).dead_endpoint(op="recv*")
+    src = MemoryConnector()
+    src.store.put("data/f0.bin", bytes(KB))
+    dst = FaultProxyConnector(MemoryConnector(), schedule)
+    creds = CredentialStore()
+    creds.register("src-ep", Credential("u", {}))
+    creds.register("dst-ep", Credential("u", {}))
+    hp = EndpointHealth(
+        HealthConfig(min_samples=1, ewma_alpha=1.0, cooldown=5.0,
+                     retry_budget_rate=0.0, retry_budget_capacity=1.0),
+        clock=clock)
+    hp.record_failure("dst-ep")       # breaker already open at submit time
+    mgr = TransferManager(max_workers=2, credential_store=creds,
+                          marker_root=str(tmp_path / "m"), clock=clock,
+                          health=hp)
+    assert mgr.health is hp
+    assert "dst-ep" in mgr.digest()["unavailable_endpoints"]
+    opt = TransferOptions(startup_cost=0.0, retry_backoff=0.01,
+                          concurrency=1, max_retries=1,
+                          coalesce_threshold=0, unavailable_patience=0.2)
+    task = mgr.submit(Endpoint(src, "data", "src-ep"),
+                      Endpoint(dst, "out", "dst-ep"), opt,
+                      task_id="sick-only")
+    # nothing else is runnable: the liveness fallback must dispatch the
+    # denied task anyway (fast-fail path) rather than wedge the queue
+    assert mgr.wait_all(timeout=60)
+    assert task.status == task.FAILED
+    assert task.stats.retries_by_kind.get("EndpointUnavailable", 0) > 0
+    mgr.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
+# property: admitted attempts against a dead endpoint are O(budget)
+# ---------------------------------------------------------------------------
+def _budget_bound_property(seed: int) -> None:
+    rng = random.Random(seed)
+    capacity = rng.randint(1, 6)
+    cfg = dict(error_threshold=rng.uniform(0.3, 0.7),
+               ewma_alpha=rng.uniform(0.3, 0.9),
+               min_samples=rng.randint(1, 4),
+               cooldown=rng.uniform(0.01, 0.2),
+               retry_budget_rate=0.0,
+               retry_budget_capacity=float(capacity))
+    hp, clock = mk_health(**cfg)
+    admitted = 0
+    legal = {("closed", "open"), ("open", "half-open"),
+             ("half-open", "open"), ("half-open", "closed")}
+    for _ in range(200):
+        try:
+            t = hp.admit("ep", retrying=admitted > 0)
+        except EndpointUnavailable as e:
+            clock.sleep(max(e.retry_after, 1e-3))
+            continue
+        admitted += 1
+        err = TransientError("always fails")
+        err.endpoint_id = "ep"
+        hp.settle(t, err)
+    # one budget-free first attempt + at most `capacity` funded retries
+    assert admitted <= capacity + 1
+    # and every breaker transition is a legal state-machine edge
+    names = hp.transition_names("ep")
+    assert all(tuple(n.split("->")) in legal for n in names)
+    prev = "closed"
+    for n in names:
+        old, new = n.split("->")
+        assert old == prev
+        prev = new
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+    def test_budget_bound_property(seed):
+        _budget_bound_property(seed)
+else:
+    @pytest.mark.parametrize("seed", list(range(16)))
+    def test_budget_bound_property(seed):
+        _budget_bound_property(seed)
