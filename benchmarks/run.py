@@ -33,6 +33,7 @@ SUITES: dict[str, tuple[str, str]] = {
     "resilience": ("bench_resilience", "health plane: breakers + failover"),
     "manager": ("bench_manager", "fleet goodput + fairness + refit"),
     "federation": ("bench_federation", "multi-site goodput + handoff"),
+    "svc": ("bench_svc", "service plane: streaming status vs polling"),
     "ckpt": ("bench_ckpt", "framework: §8 coalescing"),
     "data": ("bench_data", "framework: ingest"),
     "kernels": ("bench_kernels", "framework: pallas kernels"),

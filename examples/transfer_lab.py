@@ -112,6 +112,53 @@ def main():
               f"pauses={m.pauses} resumes={m.resumes}")
         print(f"  dispatch fairness: {m.dispatches_by_tenant}")
 
+    print("\n== service plane: streaming status instead of polling "
+          "(repro.svc) ==")
+    # Every queue mutation publishes a typed lifecycle event
+    # (queued/dispatched/progress/done/...) on the manager's StatusBus.
+    # Subscribers ride bounded ring buffers — a slow consumer drops
+    # oldest-first with an exact counter instead of stalling the
+    # publisher — and digest() answers from an etag cache while the
+    # queue generation is unchanged, so observing an idle fleet is
+    # a dict lookup, not a recompute.
+    from repro.connectors import MemoryConnector as _Mem
+    from repro.connectors import PosixConnector as _Posix
+    from repro.core import (CredentialStore, Endpoint as _Ep,
+                            TransferManager, TransferOptions as _Opts)
+    from repro.core.clock import Clock
+    with tempfile.TemporaryDirectory() as tmp:
+        src_root = os.path.join(tmp, "src")
+        os.makedirs(src_root)
+        for i in range(6):
+            with open(os.path.join(src_root, f"f{i}.bin"), "wb") as f:
+                f.write(os.urandom(64 * KB))
+        mgr = TransferManager(credential_store=CredentialStore(),
+                              marker_root=os.path.join(tmp, "markers"),
+                              clock=Clock(scale=0.0), max_workers=2)
+        firehose = mgr.bus.subscribe()            # every event
+        tiny = mgr.bus.subscribe(capacity=4)      # deliberately slow
+        done_only = mgr.bus.subscribe(types=("done",))
+        src_c, dst_c = _Posix(src_root), _Mem()
+        for i in range(6):
+            mgr.submit(_Ep(src_c, f"f{i}.bin"), _Ep(dst_c, f"f{i}.bin"),
+                       _Opts(startup_cost=0.0), task_id=f"svc-{i}")
+        mgr.wait_all(30)
+        events = firehose.poll()
+        by_type: dict = {}
+        for ev in events:
+            by_type[ev.type] = by_type.get(ev.type, 0) + 1
+        print(f"  firehose subscriber: {len(events)} events {by_type}")
+        print(f"  slow subscriber (ring of 4): kept {len(tiny)}, "
+              f"dropped {tiny.dropped} oldest-first")
+        print(f"  filtered subscriber: {len(done_only.poll())} 'done' "
+              f"events for 6 tasks")
+        d = mgr.digest()
+        mgr.digest()
+        print(f"  digest etag {d['etag']}: idle fleet -> "
+              f"{mgr.metrics.digest_hits} cache hits, "
+              f"{mgr.metrics.digest_misses} recomputes")
+        mgr.shutdown()
+
     print("\n== closed-loop online refit (§5: characterize without "
           "exhaustive benchmarking) ==")
     # Model time is charge-accounted per task (every clock charge names

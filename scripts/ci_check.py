@@ -11,7 +11,9 @@ Lanes:
   hygiene  fail on tracked bytecode artifacts (__pycache__ / *.pyc)
   compile  byte-compile src/benchmarks/examples/scripts/tests
   fed      PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
-  tier1    PYTHONPATH=src pytest -x -q -m "not chaos and not slow and not fed"
+  svc      PYTHONPATH=src pytest -q -m "svc and not chaos and not slow"
+  tier1    PYTHONPATH=src pytest -x -q
+           -m "not chaos and not slow and not fed and not svc"
   degraded PYTHONPATH=src pytest -q tests/test_degraded_scenarios.py
            -m "chaos or fed"  (health plane: brownout / death / failover)
   chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
@@ -45,8 +47,13 @@ LANES: dict[str, list[str]] = {
     # its chaos-grade scenario carries both marks and lands in "chaos"
     "fed": [sys.executable, "-m", "pytest", "-q",
             "-m", "fed and not chaos and not slow"],
+    # service plane: StatusBus streams + digest etag, its own lane so a
+    # regression is named in the log (the three PR-7 bug regressions
+    # are deliberately unmarked and run in tier1)
+    "svc": [sys.executable, "-m", "pytest", "-q",
+            "-m", "svc and not chaos and not slow"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
-              "-m", "not chaos and not slow and not fed"],
+              "-m", "not chaos and not slow and not fed and not svc"],
     # mirrors the CI chaos job's named degraded-mode step (health plane)
     "degraded": [sys.executable, "-m", "pytest", "-q",
                  "tests/test_degraded_scenarios.py",

@@ -54,6 +54,7 @@ from .connector import Session, iter_files
 from .perfmodel import Advisor, Route, fit_perf_model
 from .transfer import (Endpoint, TransferOptions, TransferService,
                        TransferTask)
+from ..svc import StatusBus
 
 
 # --------------------------------------------------------------------------
@@ -240,6 +241,11 @@ class ManagerMetrics:
     health_deferrals: int = 0
     #: route -> automatic refits performed by the online loop
     refits: dict = field(default_factory=dict)
+    #: digest() calls answered from the etag cache (queue generation
+    #: unchanged) vs. recomputed — the service plane's "an unchanged
+    #: snapshot costs ~0" evidence
+    digest_hits: int = 0
+    digest_misses: int = 0
     #: (route, predict_gen, predicted_s, actual_s) per successful routed
     #: task, in completion order — the prediction-vs-actual error record
     #: the refit loop is judged by.  A bounded ring, like the
@@ -294,6 +300,18 @@ class TransferManager:
             else None
         self.metrics = ManagerMetrics()
         self._lock = threading.RLock()
+        #: service plane: lifecycle/progress event stream (see repro.svc)
+        self.bus = StatusBus(site_id=site_id, clock=self.service.clock)
+        #: one condition variable on the manager lock carries every
+        #: completion/queue-mutation signal: wait_all blocks on it and
+        #: every _touch_locked notifies it — no poll-and-sleep anywhere
+        self._cv = threading.Condition(self._lock)
+        #: queue-state generation — the digest etag.  Bumped by every
+        #: queue mutation (submit/dispatch/pause/resume/cancel/finish/
+        #: export/import), never by reads, so an unchanged fleet answers
+        #: digest() from cache
+        self._generation = 0
+        self._digest_cache: dict | None = None
         self._queues: dict[str, list] = {}   # tenant -> [(prio, seq, sub)]
         self._rr: list[str] = []             # tenant round-robin order
         self._queued: dict[str, _Submission] = {}
@@ -316,6 +334,28 @@ class TransferManager:
         """The shared :class:`~repro.core.health.EndpointHealth` registry
         (``None`` when the health plane is off)."""
         return self.service.health
+
+    # ---- service plane: mutation signal + event publication --------------
+    def _touch_locked(self, etype: str | None = None,
+                      task: TransferTask | None = None, **data) -> None:
+        """Record one queue mutation (caller holds the lock): bump the
+        digest generation (etag), invalidate the cached snapshot, wake
+        every condition-variable waiter (``wait_all``), and publish the
+        lifecycle event on the bus."""
+        self._generation += 1
+        self._digest_cache = None
+        self._cv.notify_all()
+        if etype is not None and task is not None:
+            self.bus.publish(etype, task_id=task.task_id,
+                             data=data or None, site_id=self.site_id)
+
+    def _wire_task(self, task: TransferTask) -> None:
+        """Point the task's emit hook at this bus, so the data plane's
+        progress ticks stream to subscribers without knowing about the
+        manager."""
+        bus, site, tid = self.bus, self.site_id, task.task_id
+        task._emit = lambda etype, data=None: bus.publish(
+            etype, task_id=tid, data=data, site_id=site)
 
     # ---- submission ------------------------------------------------------
     def submit(self, src: Endpoint | None = None, dst: Endpoint | None = None,
@@ -354,8 +394,11 @@ class TransferManager:
                               next(self._seq), route_name=route_name,
                               n_files_hint=n_files, nbytes_hint=nbytes,
                               predict_gen=self._refit_gen.get(route_name, 0))
+            self._wire_task(task)
             self._enqueue_locked(sub)
             self.metrics.submitted += 1
+            self._touch_locked("queued", task, tenant=tenant,
+                               priority=priority)
         self._pump()
         if sync:
             task.wait()
@@ -510,6 +553,7 @@ class TransferManager:
         by_tenant = self.metrics.dispatches_by_tenant
         by_tenant[sub.tenant] = by_tenant.get(sub.tenant, 0) + 1
         self.metrics.dispatch_log.append((sub.tenant, tid))
+        self._touch_locked("dispatched", sub.task, tenant=sub.tenant)
 
     def _pump(self) -> None:
         """Dispatch every runnable submission to a worker thread."""
@@ -584,14 +628,19 @@ class TransferManager:
                     self.metrics.resumes += 1
                     sub.seq = next(self._seq)
                     self._enqueue_locked(sub)
+                    etype = "resumed"
                 else:
                     self._paused[tid] = sub
+                    etype = "paused"
             elif task.status == TransferTask.CANCELLED:
                 self.metrics.cancelled += 1
                 self.service.clock.forget(tid)
+                etype = "cancelled"
             else:
                 self.metrics.completed += 1
                 self.service.clock.forget(tid)
+                etype = "done" if task.status == TransferTask.SUCCEEDED \
+                    else "failed"
                 if task.status == TransferTask.SUCCEEDED and sub.route_name:
                     route = sub.route_name
                     self._history.setdefault(
@@ -611,6 +660,7 @@ class TransferManager:
                             refit_due = route
                         else:
                             self._since_refit[route] = n
+            self._touch_locked(etype, task, status=task.status)
         if refit_due is not None:
             self._auto_refit(refit_due)
         self._pump()
@@ -660,6 +710,7 @@ class TransferManager:
                 sub.task.status = TransferTask.PAUSED
                 self._paused[task_id] = sub
                 self.metrics.pauses += 1
+                self._touch_locked("paused", sub.task, while_queued=True)
                 return True
             sub = self._running.get(task_id)
             if sub is not None and not sub.task._done.is_set():
@@ -689,6 +740,7 @@ class TransferManager:
             self.metrics.resumes += 1
             sub.seq = next(self._seq)  # back of the tenant's FIFO
             self._enqueue_locked(sub)
+            self._touch_locked("resumed", task)
         self._pump()
         return True
 
@@ -705,6 +757,7 @@ class TransferManager:
                 # a paused task may have accumulated charges in earlier
                 # runs; this is its terminal state, so drop its tally
                 self.service.clock.forget(task_id)
+                self._touch_locked("cancelled", sub.task)
                 return True
             sub = self._running.get(task_id)
             if sub is not None:
@@ -715,29 +768,23 @@ class TransferManager:
     def wait(self, task_id: str, timeout: float | None = None) -> bool:
         return self.service.get(task_id).wait(timeout)
 
-    #: re-snapshot cadence for wait_all — a task can leave the pending
-    #: set without setting _done (pause), so no single _done wait may
-    #: consume the whole timeout budget
-    WAIT_SLICE = 0.02
+    def _drained_locked(self) -> bool:
+        """True when no task is pending: everything in ``_all`` is
+        either finished or filed into the paused set."""
+        return all(s.task._done.is_set() or tid in self._paused
+                   for tid, s in self._all.items())
 
     def wait_all(self, timeout: float | None = None) -> bool:
-        """Wait until every non-paused task has finished."""
-        import time as _time
-        deadline = None if timeout is None else _time.monotonic() + timeout
-        while True:
-            with self._lock:
-                pending = [s.task for s in self._all.values()
-                           if s.task.task_id not in self._paused
-                           and not s.task._done.is_set()]
-            if not pending:
-                return True
-            remaining = None if deadline is None \
-                else deadline - _time.monotonic()
-            if remaining is not None and remaining <= 0:
-                return False
-            step = self.WAIT_SLICE if remaining is None \
-                else min(self.WAIT_SLICE, remaining)
-            pending[0].wait(step)
+        """Wait until every non-paused task has finished.
+
+        Event-driven: blocks on the manager condition variable that
+        every queue mutation (completion, pause filing, export, ...)
+        notifies via :meth:`_touch_locked` — the same signal StatusBus
+        subscribers ride.  The old implementation re-polled a pending
+        snapshot every 20 ms of wall time (and only ever waited on
+        ``pending[0]``); completion latency is now one ``notify``."""
+        with self._cv:
+            return self._cv.wait_for(self._drained_locked, timeout)
 
     def shutdown(self, wait: bool = True,
                  timeout: float | None = None) -> None:
@@ -780,6 +827,10 @@ class TransferManager:
             sub.queued_seq = None  # tombstone any live heap entry
             self._all.pop(task_id, None)
             self.metrics.exports += 1
+            # notify inside the locked pop: wait_all's predicate stops
+            # consulting this task the moment it leaves _all, and the
+            # HANDED_OFF finish below runs outside the lock
+            self._touch_locked("handed_off", sub.task, state=state)
         st = sub.task.stats
         payload = {
             "version": 1,
@@ -855,9 +906,11 @@ class TransferManager:
                 # adopting a paused task IS its resume
                 task.stats.resumes += 1
                 self.metrics.resumes += 1
+            self._wire_task(task)
             self._enqueue_locked(sub)
             self.metrics.submitted += 1
             self.metrics.imports += 1
+            self._touch_locked("queued", task, imported=True)
         self._pump()
         return task
 
@@ -868,19 +921,41 @@ class TransferManager:
         with self._lock:
             return task_id not in self._running
 
-    def digest(self) -> dict:
+    def digest(self, fresh: bool = False) -> dict:
         """Queue-state snapshot a federation coordinator exchanges
         between sites: depth, in-flight bytes, and per-endpoint
-        saturation (active tasks / cap)."""
+        saturation — plus a monotonic ``etag`` (the queue-state
+        generation).
+
+        While no queue mutation has happened since the last call the
+        cached snapshot is returned as-is, so heartbeating an unchanged
+        fleet costs ~0 (a dict lookup; ``metrics.digest_hits`` counts
+        these).  ``fresh=True`` forces a recompute — the pre-etag cost,
+        kept as the benchmark baseline.  In-flight byte counts only
+        advance *across* generations; within one, progress freshness is
+        the StatusBus event stream's job, not the digest's.
+
+        Saturation: ``active/cap`` per endpoint when a cap is set.  An
+        uncapped manager used to report ``0.0`` for every endpoint —
+        least-loaded and rebalance placement saw a fully-busy uncapped
+        site as idle — so it now falls back to a busy-based signal,
+        ``min(1, active/worker_budget)``."""
         with self._lock:
+            snap = self._digest_cache
+            if snap is not None and not fresh \
+                    and snap["etag"] == self._generation:
+                self.metrics.digest_hits += 1
+                return snap
             in_flight = sum(
                 max(0, s.task.stats.bytes_total - s.task.stats.bytes_done)
                 for s in self._running.values())
             cap = self.per_endpoint_cap
-            saturation = {ep: (n / cap if cap else 0.0)
+            budget = max(1, self.max_workers)
+            saturation = {ep: (n / cap if cap
+                               else min(1.0, n / budget))
                           for ep, n in self._active_eps.items()}
             health = self.service.health
-            return {"site_id": self.site_id,
+            snap = {"site_id": self.site_id,
                     "queued": len(self._queued),
                     "running": len(self._running),
                     "paused": len(self._paused),
@@ -888,7 +963,14 @@ class TransferManager:
                     "saturation": saturation,
                     "unavailable_endpoints":
                         sorted(health.unavailable()) if health is not None
-                        else []}
+                        else [],
+                    "etag": self._generation}
+            self._digest_cache = snap
+            self.metrics.digest_misses += 1
+            # a recompute IS the periodic digest delta: stream it, so
+            # subscribers track queue state without calling digest()
+            self.bus.publish("digest", data=snap, site_id=self.site_id)
+            return snap
 
     # ---- observability / online refit -----------------------------------
     def counts(self) -> dict:

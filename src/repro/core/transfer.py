@@ -228,12 +228,18 @@ class TransferTask:
 
     RATE_WINDOW = 4096  # ring-buffer capacity for throughput samples
 
-    def __init__(self, task_id: str):
+    def __init__(self, task_id: str, clock: Clock | None = None):
         self.task_id = task_id
         self.status = self.PENDING
         self.stats = TaskStats()
         self.files: list[FileResult] = []
+        #: (model_time, message) pairs — stamped with the owning
+        #: service's clock, so same-seed runs log identical streams
         self.events: list[tuple[float, str]] = []
+        self._clock = clock or DEFAULT_CLOCK
+        #: service-plane hook: the owning manager points this at its
+        #: StatusBus so progress ticks stream to subscribers
+        self._emit = None
         self._done = threading.Event()
         self._lock = threading.Lock()
         # control plane: pause/cancel requests checked by the run loop
@@ -273,13 +279,21 @@ class TransferTask:
 
     def log(self, msg: str) -> None:
         with self._lock:
-            self.events.append((time.monotonic(), msg))
+            self.events.append((self._clock.virtual_elapsed, msg))
 
     def _bytes_tick(self, n: int) -> None:
-        """Credit (or, for integrity re-sends, un-credit) progress."""
+        """Credit (or, for integrity re-sends, un-credit) progress.
+        Stamped with *model* time — like ``events``, so rate samples
+        and streamed progress events are deterministic under the
+        simulated clock."""
+        now = self._clock.virtual_elapsed
         with self._lock:
             self.stats.bytes_done += n
-            self._rate_samples.append((time.monotonic(), self.stats.bytes_done))
+            self._rate_samples.append((now, self.stats.bytes_done))
+            done, total = self.stats.bytes_done, self.stats.bytes_total
+        emit = self._emit
+        if emit is not None:  # outside the task lock: the bus is a leaf
+            emit("progress", {"bytes_done": done, "bytes_total": total})
 
     def _note_fault(self, err: Exception) -> None:
         """Account one transient fault the service will work around, by
@@ -303,7 +317,9 @@ class TransferTask:
                 self.stats.retries_by_kind.get("HalfOpenProbe", 0) + 1
 
     def throughput(self, window: float = 2.0) -> float:
-        """Instantaneous B/s over the trailing window (perf markers)."""
+        """Instantaneous B/s over the trailing window (perf markers).
+        ``window`` is *model* seconds — samples are model-clock
+        stamped."""
         with self._lock:
             if len(self._rate_samples) < 2:
                 return 0.0
@@ -776,6 +792,19 @@ class _FilePipe:
     def next_block_range(self) -> ByteRange | None:
         with self._cv:
             while True:
+                if self._error is None and self.abort is not None:
+                    # pause/cancel must also stop the receive side: the
+                    # sender has no backpressure, so once every range is
+                    # claimed the claim-side abort gate can never fire
+                    # again and an in-flight file would run to completion
+                    # despite the request.  Written ranges stay durable
+                    # and checkpointed; undelivered blocks are re-sent as
+                    # holes on resume.
+                    err = self.abort()
+                    if err is not None:
+                        self._error = err
+                        self._send_done = True
+                        self._cv.notify_all()
                 if self._error is not None:
                     raise self._error
                 if self._ready_order:
@@ -971,7 +1000,7 @@ class TransferService:
             basis = f"{src.resolved_id()}:{src.path}->{dst.resolved_id()}:{dst.path}"
             task_id = (hashlib.sha1(basis.encode()).hexdigest()[:12]
                        + "-" + os.urandom(4).hex())
-        task = TransferTask(task_id)
+        task = TransferTask(task_id, clock=self.clock)
         self._tasks[task_id] = task
         return task
 
@@ -1210,15 +1239,39 @@ class TransferService:
             tuner.join(timeout=1.0)
         task.stats.effective_concurrency = float(task_target[0])
 
+    #: model seconds of task progress between controller evaluations
+    TUNE_WINDOW = 0.15
+
     def _tune(self, task: TransferTask, target: list[int],
               opt: TransferOptions, stop: threading.Event) -> None:
         """§8 best practice automated: raise concurrency while marginal
         throughput gain is positive ('we increased concurrency until we
-        see negative benefit')."""
+        see negative benefit').
+
+        Evaluations are paced by the task's own model-time progress, not
+        a wall-clock period: a fixed wall settle starves the controller
+        on fast machines (sleep-debt batching compresses the whole
+        transfer under one settle) and over-polls on slow ones.  The
+        gain signal itself is wall-clock rate when the clock has a
+        positive scale — overlapped real sleeps are what concurrency
+        improves under the scaled clock — and model rate in pure
+        accounting mode, where virtual time sums across streams.
+        """
         best_rate = 0.0
-        settle = 0.1 if self.clock.scale > 0 else 0.02
-        while not stop.wait(settle):
-            rate = task.throughput(window=settle * 2)
+        last_t = 0.0
+        last_b = 0
+        last_w = time.monotonic()
+        while not stop.wait(0.002):
+            with task._lock:
+                if not task._rate_samples:
+                    continue
+                t, b = task._rate_samples[-1]
+            if t - last_t < self.TUNE_WINDOW:
+                continue
+            now_w = time.monotonic()
+            dt = (now_w - last_w) if self.clock.scale > 0 else (t - last_t)
+            rate = (b - last_b) / max(dt, 1e-9)
+            last_t, last_b, last_w = t, b, now_w
             if rate > best_rate * 1.05 and target[0] < opt.max_concurrency:
                 best_rate = max(best_rate, rate)
                 target[0] = min(opt.max_concurrency, target[0] * 2)

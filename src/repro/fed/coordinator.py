@@ -48,6 +48,7 @@ from ..core.clock import charge_to
 from ..core.connector import Connector
 from ..core.perfmodel import Advisor
 from ..core.transfer import Endpoint, TransferTask
+from ..svc import StatusBus
 from .spec import TransferSpec
 
 #: built-in placement policy names (see :meth:`FederatedCoordinator._place`)
@@ -88,11 +89,16 @@ class QueueDigest:
     running: int
     paused: int
     in_flight_bytes: int
-    #: endpoint id -> active tasks / per-endpoint cap (0.0 if uncapped)
+    #: endpoint id -> active tasks / per-endpoint cap (busy-based
+    #: ``active / worker budget`` when the site is uncapped)
     saturation: dict = field(default_factory=dict)
     #: endpoint ids whose circuit breaker the site reports as open
     #: (health plane, :mod:`repro.core.health`)
     unavailable: list = field(default_factory=list)
+    #: the site manager's queue-state generation this digest reflects;
+    #: an unchanged etag means the site's queue has not mutated, so the
+    #: coordinator reuses the previous digest instead of rebuilding
+    etag: int = -1
 
     @property
     def depth(self) -> int:
@@ -110,6 +116,9 @@ class FedMetrics:
     #: queued specs migrated by the hysteresis rebalancer
     rebalances: int = 0
     digest_exchanges: int = 0
+    #: per-site digests answered by the etag cache during exchanges —
+    #: the "beat() consumes the etag instead of recomputing" evidence
+    digest_reuses: int = 0
     #: site_id -> cumulative missed heartbeats (digest() calls that
     #: raised); reset never — per-site consecutive-miss state lives on
     #: the SiteHandle
@@ -203,8 +212,13 @@ class FederatedCoordinator:
 
     def __init__(self, placement: str = "owner", name: str = "fed",
                  digest_every: int = 4, miss_threshold: int = 3,
-                 rebalance: RebalancePolicy | None = None):
+                 rebalance: RebalancePolicy | None = None,
+                 bus: StatusBus | None = None):
         self.placement = placement
+        #: service plane: placement/failover/beat event stream; events
+        #: are stamped with the involved site's model clock when one is
+        #: known (the coordinator itself has no clock — third party)
+        self.bus = bus or StatusBus(site_id=f"fed:{name}")
         #: charge-clock identity all coordinator work is attributed to;
         #: third-party semantics == this owner's tally stays 0.0
         self.charge_owner = f"fed:{name}"
@@ -287,13 +301,22 @@ class FederatedCoordinator:
                 misses[site.site_id] = misses.get(site.site_id, 0) + 1
                 continue
             site.missed_beats = 0
+            etag = d.get("etag", -1)
+            prev = site.digest
+            if prev is not None and etag >= 0 and etag == prev.etag:
+                # etag hit: the site's queue has not mutated since the
+                # last beat — keep the previous digest, skip the rebuild
+                self.metrics.digest_reuses += 1
+                out[site.site_id] = prev
+                continue
             site.digest = QueueDigest(
                 site_id=site.site_id, seq=next(self._digest_seq),
                 queued=d["queued"], running=d["running"],
                 paused=d["paused"],
                 in_flight_bytes=d["in_flight_bytes"],
                 saturation=d["saturation"],
-                unavailable=list(d.get("unavailable_endpoints", [])))
+                unavailable=list(d.get("unavailable_endpoints", [])),
+                etag=etag)
             out[site.site_id] = site.digest
         self.metrics.digest_exchanges += 1
         self._since_exchange = 0
@@ -330,6 +353,7 @@ class FederatedCoordinator:
             failed.append(site_id)
         if self.rebalance is not None:
             self.maybe_rebalance()
+        self.bus.publish("beat", data={"failed": list(failed)})
         return failed
 
     # ---- hysteresis rebalancing -----------------------------------------
@@ -478,6 +502,9 @@ class FederatedCoordinator:
             self.metrics.placements.get(site.site_id, 0) + 1
         self.metrics.placement_log.append(
             (spec.task_id, site.site_id, reason))
+        self.bus.publish("placed", task_id=spec.task_id,
+                         data={"site": site.site_id, "reason": reason},
+                         t=site.manager.service.clock.virtual_elapsed)
         return task
 
     # ---- handoff ---------------------------------------------------------
@@ -661,6 +688,9 @@ class FederatedCoordinator:
         finally:
             self.metrics.failovers += 1
             site.manager.shutdown(wait=False)
+            self.bus.publish("failover",
+                             data={"site": site_id, "moved": len(moved),
+                                   "stranded": len(stranded)})
         if stranded:
             raise StrandedTasksError(site_id, moved, stranded)
         return moved
@@ -668,21 +698,48 @@ class FederatedCoordinator:
     # ---- lifecycle fan-out ----------------------------------------------
     def wait_all(self, timeout: float | None = None) -> bool:
         """Wait until every placed task has finished on its current
-        site (paused tasks excluded, as in ``TransferManager``)."""
+        site (paused tasks excluded, as in ``TransferManager``).
+
+        Delegates to each live site's condition-variable ``wait_all``
+        (one notify per completion — no wall-clock re-poll slicing);
+        the outer loop only re-checks for tasks that migrated to
+        another site (handoff / failover) while a site was draining.
+        A task stranded on no live site falls back to a bounded wait
+        on its own done event."""
         deadline = None if timeout is None else time.monotonic() + timeout
+
+        def _pending_locked():
+            return [t for t in self._tasks.values()
+                    if not t._done.is_set()
+                    and t.status != TransferTask.PAUSED]
+
         while True:
             with self._lock:
-                pending = [t for t in self._tasks.values()
-                           if not t._done.is_set()
-                           and t.status != TransferTask.PAUSED]
+                pending = _pending_locked()
+                sites = [s for s in self._sites.values() if s.alive]
             if not pending:
                 return True
-            remaining = None if deadline is None \
-                else deadline - time.monotonic()
-            if remaining is not None and remaining <= 0:
-                return False
-            step = 0.02 if remaining is None else min(0.02, remaining)
-            pending[0].wait(step)
+            drained = True
+            for site in sites:
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                drained = site.manager.wait_all(remaining) and drained
+            with self._lock:
+                still = _pending_locked()
+            if not still:
+                return True
+            if drained:
+                # every live site is drained yet tasks remain: they are
+                # stranded off-site (dead site / mid-migration) — wait
+                # on the task itself, bounded so migrations re-check
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                step = 0.1 if remaining is None else min(0.1, remaining)
+                still[0].wait(step)
 
     def shutdown(self, wait: bool = True,
                  timeout: float | None = None) -> None:

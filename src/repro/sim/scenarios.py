@@ -795,6 +795,19 @@ class ScenarioRunner:
                                   "had no mid-flight task to kill")
                 hold.release()
             else:
+                victim_tasks = [coord.task(tid) for tid in victim_ids]
+                import time as _time
+                # the crossing block _HoldSrc let through is still in
+                # flight on the receive side, and a pause stops the
+                # receiver at block granularity — killing the site
+                # before that block lands durable would checkpoint zero
+                # progress.  Wait for its write (fast: the dst is not
+                # gated) before pulling the plug.
+                t_end = _time.monotonic() + min(60.0, timeout)
+                while _time.monotonic() < t_end:
+                    if any(t.stats.bytes_done > 0 for t in victim_tasks):
+                        break
+                    _time.sleep(0.002)
                 fail_err: list[Exception] = []
 
                 def do_fail():
@@ -809,8 +822,6 @@ class ScenarioRunner:
                 # release the held stream only once every victim task has
                 # its pause landed (or finished): the site's checkpoint
                 # is guaranteed to happen while the task was mid-flight
-                victim_tasks = [coord.task(tid) for tid in victim_ids]
-                import time as _time
                 t_end = _time.monotonic() + min(60.0, timeout)
                 while _time.monotonic() < t_end:
                     if all(t._done.is_set() or t._pause_req.is_set()

@@ -1,0 +1,9 @@
+"""Service plane: subscription-based status streaming (see bus.py).
+
+Re-exports the public surface so callers write ``from repro.svc import
+StatusBus`` — the module layout stays an implementation detail.
+"""
+
+from .bus import EVENT_TYPES, StatusBus, StatusEvent, Subscription
+
+__all__ = ["EVENT_TYPES", "StatusBus", "StatusEvent", "Subscription"]

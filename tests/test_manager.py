@@ -210,6 +210,84 @@ def test_pause_resume_no_resend_of_completed_ranges(tmp_path):
     mgr.shutdown()
 
 
+def test_pause_lands_after_sender_claimed_everything(tmp_path):
+    """A pause request must interrupt a file even when the send side has
+    already claimed (and pushed) every block range.  The sender has no
+    backpressure, so on an unloaded run it rips through the whole claim
+    queue in milliseconds; the claim-side abort gate then can never fire
+    again, and before the receive side also checked the abort hook the
+    transfer ran to SUCCEEDED despite pause() returning True."""
+    payload = os.urandom(8 * MB)
+
+    sent_done = threading.Event()  # sender pushed every block
+
+    class DoneSignalPosix(PosixConnector):
+        def send(self, session, path, channel):
+            try:
+                super().send(session, path, channel)
+            finally:
+                sent_done.set()
+
+    root = os.path.join(str(tmp_path), "srcroot")
+    src = DoneSignalPosix(root)
+    p = os.path.join(root, "big.bin")
+    os.makedirs(root, exist_ok=True)
+    with open(p, "wb") as f:
+        f.write(payload)
+
+    gate = threading.Event()      # set => receive-side reads flow
+    reached = threading.Event()   # first 2 MB landed
+    seen = {"n": 0}
+    lock = threading.Lock()
+
+    class GateMemory(MemoryConnector):
+        def recv(self, session, path, channel):
+            class Wrap:
+                def __getattr__(w, k):
+                    return getattr(channel, k)
+
+                def read(w, offset, length):
+                    with lock:
+                        seen["n"] += length
+                        hit = seen["n"] >= 2 * MB
+                    if hit:
+                        reached.set()
+                        gate.wait(timeout=30)
+                    return channel.read(offset, length)
+
+            super().recv(session, path, Wrap())
+
+    dst = GateMemory()
+    mgr = make_manager(tmp_path)
+    opts = TransferOptions(startup_cost=0.0, blocksize=256 * 1024,
+                           parallelism=1, concurrency=1)
+    task = mgr.submit(Endpoint(src, "big.bin"), Endpoint(dst, "big.bin"),
+                      opts, task_id="late-pause")
+    assert reached.wait(30), "transfer never reached the gate"
+    # the receiver is gated, so the unthrottled sender drains its claim
+    # queue completely — THEN the pause arrives, deterministically after
+    # the last claim (the racy ordering the flaky version only hit under
+    # machine load)
+    assert sent_done.wait(30), "sender never finished claiming"
+    assert mgr.pause("late-pause")
+    gate.set()
+    assert task.wait_idle(30)
+    assert task.status == task.PAUSED, task.events[-5:]
+
+    state = mgr.service.markers.load("late-pause")
+    done_ranges = state["files"]["big.bin"]["done"]
+    done_bytes = sum(length for _, length in done_ranges)
+    assert 0 < done_bytes < len(payload)
+
+    # resume closes only the holes
+    assert mgr.resume("late-pause")
+    assert task.wait(60)
+    assert task.status == task.SUCCEEDED, task.events[-5:]
+    dst.start(None)
+    assert dst.store.get("big.bin") == payload
+    mgr.shutdown()
+
+
 def test_resume_races_inflight_pause(tmp_path):
     """resume() fired immediately after pause() — before the run loop
     drains — must still re-queue the task, never wedge it in PAUSED."""

@@ -1,0 +1,429 @@
+"""Service plane: StatusBus subscription semantics, the digest etag,
+and the PR's three foregrounded bug regressions (uncapped saturation,
+condition-variable wait_all, model-clock event timestamps).
+
+Bus/etag tests carry the ``svc`` marker (their own CI lane); the bug
+regressions are unmarked so they run in tier-1.
+"""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.connectors import MemoryConnector
+from repro.core import (CredentialStore, Endpoint, TransferManager,
+                        TransferOptions)
+from repro.core.clock import Clock
+from repro.core.transfer import TransferTask
+from repro.fed import FederatedCoordinator, RebalancePolicy, TransferSpec
+from repro.svc import StatusBus
+
+KB = 1024
+
+svc = pytest.mark.svc
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def make_manager(tmp_path, **kw):
+    kw.setdefault("max_workers", 4)
+    kw.setdefault("per_endpoint_cap", 2)
+    return TransferManager(credential_store=CredentialStore(),
+                           marker_root=os.path.join(str(tmp_path), "markers"),
+                           clock=Clock(scale=0.0), **kw)
+
+
+def seed_memory(files):
+    conn = MemoryConnector()
+    for name, payload in files.items():
+        conn.store.put(name, payload)
+    return conn
+
+
+class GatedDst(MemoryConnector):
+    """Destination whose data plane blocks until ``release()`` — holds
+    tasks in the running state for as long as a test needs."""
+
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+        self.entered = threading.Semaphore(0)
+
+    def release(self):
+        self.gate.set()
+
+    def recv(self, session, path, channel):
+        self.entered.release()
+        assert self.gate.wait(60)
+        return super().recv(session, path, channel)
+
+    def recv_batch(self, session, paths, channel_factory):
+        self.entered.release()
+        assert self.gate.wait(60)
+        return super().recv_batch(session, paths, channel_factory)
+
+
+FAST = TransferOptions(startup_cost=0.0, concurrency=1,
+                       coalesce_threshold=0)
+
+
+# --------------------------------------------------------------------------
+# StatusBus semantics (svc lane)
+# --------------------------------------------------------------------------
+@svc
+def test_slow_subscriber_drop_oldest_exact():
+    bus = StatusBus(site_id="s")
+    sub = bus.subscribe(capacity=4)
+    for i in range(10):
+        bus.publish("progress", task_id=f"t{i}")
+    assert sub.dropped == 6
+    events = sub.poll()
+    # the tail survived, oldest-first, and the seq gap equals dropped
+    assert [e.task_id for e in events] == ["t6", "t7", "t8", "t9"]
+    assert events[0].seq == 6
+    assert len(sub) == 0
+    # after a drain the ring accepts new events without further drops
+    bus.publish("done", task_id="t10")
+    assert sub.dropped == 6
+    assert [e.task_id for e in sub.poll()] == ["t10"]
+
+
+@svc
+def test_unsubscribe_frees_buffer_and_stops_delivery():
+    bus = StatusBus()
+    keep = bus.subscribe()
+    gone = bus.subscribe()
+    bus.publish("queued", task_id="a")
+    assert len(gone) == 1
+    gone.close()
+    assert bus.subscribers == 1
+    assert len(gone) == 0  # buffer freed, not just detached
+    bus.publish("queued", task_id="b")
+    assert len(gone) == 0
+    assert [e.task_id for e in keep.poll()] == ["a", "b"]
+    # idempotent
+    gone.close()
+    assert bus.subscribers == 1
+
+
+@svc
+def test_subscription_filters_and_blocking_next():
+    clock = Clock(scale=0.0)
+    bus = StatusBus(site_id="x", clock=clock)
+    only_done = bus.subscribe(types=("done", "failed"))
+    only_t1 = bus.subscribe(task_id="t1")
+    bus.publish("queued", task_id="t1")
+    bus.publish("done", task_id="t2")
+    assert [e.type for e in only_done.poll()] == ["done"]
+    assert [(e.type, e.task_id) for e in only_t1.poll()] == [("queued", "t1")]
+
+    sub = bus.subscribe()
+    got = []
+    t = threading.Thread(target=lambda: got.append(sub.next(timeout=30)))
+    t.start()
+    clock.sleep(1.5)
+    bus.publish("progress", task_id="t3", data={"bytes_done": 7})
+    t.join(30)
+    assert not t.is_alive()
+    ev = got[0]
+    assert ev.type == "progress" and ev.task_id == "t3"
+    assert ev.t == pytest.approx(1.5)  # model-time stamp
+    assert ev.site_id == "x"
+
+
+@svc
+def test_manager_streams_lifecycle_events(tmp_path):
+    files = {f"d/f{i}.bin": b"x" * (2 * KB) for i in range(3)}
+    src = seed_memory(files)
+    mgr = make_manager(tmp_path)
+    sub = mgr.bus.subscribe(capacity=512)
+    task = mgr.submit(Endpoint(src, "d", "src"),
+                      Endpoint(MemoryConnector(), "out", "dst"),
+                      FAST, task_id="lc-1", sync=True)
+    assert task.status == task.SUCCEEDED
+    events = [e for e in sub.poll() if e.task_id == "lc-1"]
+    types = [e.type for e in events]
+    assert types[0] == "queued"
+    assert types[1] == "dispatched"
+    assert types[-1] == "done"
+    assert "progress" in types
+    # progress events carry byte counts and land between dispatch/done
+    prog = [e for e in events if e.type == "progress"]
+    assert prog[-1].data["bytes_done"] == task.stats.bytes_total
+    # model-time stamps, monotone non-decreasing through the lifecycle
+    ts = [e.t for e in events]
+    assert ts == sorted(ts)
+    mgr.shutdown(wait=False)
+
+
+@svc
+def test_manager_streams_pause_resume_cancel(tmp_path):
+    files = {"d/a.bin": b"x" * KB}
+    src = seed_memory(files)
+    dst = GatedDst()
+    mgr = make_manager(tmp_path, max_workers=1, per_endpoint_cap=None)
+    sub = mgr.bus.subscribe()
+    # q1 occupies the single worker; q2/q3 stay queued
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o1", "d1"),
+               FAST, task_id="q1")
+    assert dst.entered.acquire(timeout=30)
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o2", "d2"),
+               FAST, task_id="q2")
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o3", "d3"),
+               FAST, task_id="q3")
+    assert mgr.pause("q2")
+    assert mgr.resume("q2")
+    assert mgr.cancel("q3")
+    dst.release()
+    assert mgr.wait_all(timeout=60)
+    seen = [(e.type, e.task_id) for e in sub.poll()]
+    assert ("paused", "q2") in seen
+    assert ("resumed", "q2") in seen
+    assert ("cancelled", "q3") in seen
+    assert ("done", "q1") in seen and ("done", "q2") in seen
+    mgr.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# digest etag (svc lane)
+# --------------------------------------------------------------------------
+@svc
+def test_digest_etag_stable_until_queue_mutates(tmp_path):
+    files = {"d/a.bin": b"x" * KB}
+    src = seed_memory(files)
+    dst = GatedDst()
+    mgr = make_manager(tmp_path, max_workers=1, per_endpoint_cap=None)
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o1", "d1"),
+               FAST, task_id="e1")
+    assert dst.entered.acquire(timeout=30)
+
+    d1 = mgr.digest()
+    h0 = mgr.metrics.digest_hits
+    d2 = mgr.digest()
+    d3 = mgr.digest()
+    # no queue mutation: same snapshot object, no recompute
+    assert d2 is d1 and d3 is d1
+    assert mgr.metrics.digest_hits == h0 + 2
+
+    # every queue mutation bumps the etag
+    etags = [d1["etag"]]
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o2", "d2"),
+               FAST, task_id="e2")
+    etags.append(mgr.digest()["etag"])
+    assert mgr.pause("e2")
+    etags.append(mgr.digest()["etag"])
+    assert mgr.resume("e2")
+    etags.append(mgr.digest()["etag"])
+    assert mgr.cancel("e2")
+    etags.append(mgr.digest()["etag"])
+    assert etags == sorted(etags) and len(set(etags)) == len(etags)
+
+    # fresh=True recomputes without inventing a new generation
+    f = mgr.digest(fresh=True)
+    assert f["etag"] == etags[-1]
+    dst.release()
+    assert mgr.wait_all(timeout=60)
+    mgr.shutdown(wait=False)
+
+
+@svc
+def test_coordinator_reuses_digest_across_noop_beats(tmp_path):
+    clock = Clock(scale=0.0)
+    eps = {"src-ep": seed_memory({"d/a.bin": b"x"}),
+           "dst-ep": MemoryConnector()}
+    coord = FederatedCoordinator(placement="owner")
+    mgr = make_manager(tmp_path, per_endpoint_cap=None)
+    site = coord.register_site("a", mgr, eps)
+
+    coord.beat()
+    seq1 = site.digest.seq
+    reuses0 = coord.metrics.digest_reuses
+    coord.beat()
+    coord.beat()
+    # no queue mutation between beats: the QueueDigest was reused, not
+    # rebuilt (seq unchanged), and the manager answered from cache
+    assert site.digest.seq == seq1
+    assert coord.metrics.digest_reuses == reuses0 + 2
+    assert mgr.metrics.digest_hits >= 2
+
+    # a real submission invalidates: the next beat rebuilds
+    spec = TransferSpec.new("b-1", "src-ep", "d", "dst-ep", "out",
+                            options=FAST)
+    coord.submit(spec.to_json(), sync=True)
+    coord.beat()
+    assert site.digest.seq > seq1
+    coord.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# regression 1: uncapped saturation (unmarked -> tier-1)
+# --------------------------------------------------------------------------
+def test_uncapped_digest_reports_busy_saturation(tmp_path):
+    """per_endpoint_cap=None used to report saturation 0.0 for every
+    endpoint, making a fully-busy uncapped site look idle."""
+    files = {"d/a.bin": b"x" * KB}
+    src = seed_memory(files)
+    dst = GatedDst()
+    mgr = make_manager(tmp_path, max_workers=2, per_endpoint_cap=None)
+    for i in range(2):
+        mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, f"o{i}", "dst"),
+                   FAST, task_id=f"sat-{i}")
+    assert dst.entered.acquire(timeout=30)
+    assert dst.entered.acquire(timeout=30)
+    sat = mgr.digest(fresh=True)["saturation"]
+    # both endpoints are at the full worker budget: saturation 1.0
+    assert sat and all(v == pytest.approx(1.0) for v in sat.values()), sat
+    dst.release()
+    assert mgr.wait_all(timeout=60)
+    mgr.shutdown(wait=False)
+
+
+def test_uncapped_busy_site_does_not_win_placement(tmp_path):
+    """Rebalance placement must see an uncapped busy site as hot and
+    migrate its queued spec to an idle peer — before the fix the busy
+    site's signal was 0 and the queued task stayed put."""
+    clock = Clock(scale=0.0)
+    src = seed_memory({"d/a.bin": b"x" * KB})
+    dst = GatedDst()
+    eps = {"src-ep": src, "dst-ep": dst}
+
+    def site(name):
+        return TransferManager(
+            credential_store=CredentialStore(), max_workers=2,
+            per_endpoint_cap=None,
+            marker_root=os.path.join(str(tmp_path), f"markers-{name}"),
+            clock=clock, site_id=name)
+
+    coord = FederatedCoordinator(
+        placement="owner",
+        rebalance=RebalancePolicy(enter=0.75, exit=0.35, dwell=0.0,
+                                  max_moves=2, move_cooldown=0.0))
+    coord.register_site("busy", site("busy"), eps,
+                        owns={"src-ep", "dst-ep"})
+    coord.register_site("idle", site("idle"), eps, owns=set())
+
+    # two gated tasks fill the busy site's worker budget; a third queues
+    for i in range(3):
+        spec = TransferSpec.new(f"rb-{i}", "src-ep", "d", "dst-ep",
+                                f"out{i}", options=FAST)
+        coord.submit(spec.to_json())
+    assert dst.entered.acquire(timeout=30)
+    assert dst.entered.acquire(timeout=30)
+    assert all(coord.site_of(f"rb-{i}") == "busy" for i in range(3))
+
+    coord.exchange_digests()
+    moved = coord.maybe_rebalance()
+    assert ("rb-2", "busy", "idle") in moved, moved
+    assert coord.site_of("rb-2") == "idle"
+
+    dst.release()
+    assert coord.wait_all(timeout=60)
+    coord.assert_third_party()
+    coord.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# regression 2: wait_all is notification-driven (unmarked -> tier-1)
+# --------------------------------------------------------------------------
+def test_wait_all_does_not_slice_poll(tmp_path, monkeypatch):
+    """The old wait_all re-polled ``pending[0].wait(0.02)`` on wall
+    time; the rewrite blocks on the manager condition variable and
+    never touches task.wait at all."""
+    assert not hasattr(TransferManager, "WAIT_SLICE")
+
+    files = {"d/a.bin": b"x" * KB}
+    src = seed_memory(files)
+    dst = GatedDst()
+    mgr = make_manager(tmp_path, max_workers=1, per_endpoint_cap=None)
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o1", "d1"),
+               FAST, task_id="w1")
+    assert dst.entered.acquire(timeout=30)
+
+    wait_calls = []
+    orig_wait = TransferTask.wait
+
+    def spying_wait(self, timeout=None):
+        wait_calls.append(timeout)
+        return orig_wait(self, timeout)
+
+    monkeypatch.setattr(TransferTask, "wait", spying_wait)
+    done = []
+    waiter = threading.Thread(
+        target=lambda: done.append(mgr.wait_all(timeout=60)))
+    waiter.start()
+    time.sleep(0.15)  # long enough for the old code to slice many times
+    assert not done, "wait_all returned while the task was still gated"
+    dst.release()
+    waiter.join(60)
+    assert done == [True]
+    assert wait_calls == [], \
+        f"wait_all fell back to polling task.wait: {wait_calls[:5]}"
+    mgr.shutdown(wait=False)
+
+
+def test_wait_all_excludes_paused_and_wakes_on_pause(tmp_path):
+    """A task leaving the pending set by pausing (not finishing) must
+    wake wait_all — the cv notify covers every queue mutation."""
+    files = {"d/a.bin": b"x" * KB}
+    src = seed_memory(files)
+    dst = GatedDst()
+    mgr = make_manager(tmp_path, max_workers=1, per_endpoint_cap=None)
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o1", "d1"),
+               FAST, task_id="p1")
+    assert dst.entered.acquire(timeout=30)
+    mgr.submit(Endpoint(src, "d", "src"), Endpoint(dst, "o2", "d2"),
+               FAST, task_id="p2")
+    done = []
+    waiter = threading.Thread(
+        target=lambda: done.append(mgr.wait_all(timeout=60)))
+    waiter.start()
+    # pausing the queued task removes it from the pending set; with p1
+    # still gated wait_all must keep waiting, then return when p1 lands
+    assert mgr.pause("p2")
+    time.sleep(0.05)
+    assert not done
+    dst.release()
+    waiter.join(60)
+    assert done == [True]
+    assert mgr.get("p2").status == TransferTask.PAUSED
+    mgr.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# regression 3: model-clock event timestamps (unmarked -> tier-1)
+# --------------------------------------------------------------------------
+def _timestamp_run(tmp_path, tag):
+    clock = Clock(scale=0.0)
+    src = seed_memory({"d/a.bin": b"y" * (8 * KB)})
+    mgr = TransferManager(
+        credential_store=CredentialStore(), max_workers=1,
+        per_endpoint_cap=None,
+        marker_root=os.path.join(str(tmp_path), f"markers-{tag}"),
+        clock=clock, site_id=tag)
+    opts = TransferOptions(startup_cost=0.5, concurrency=1,
+                           coalesce_threshold=0)
+    task = mgr.submit(Endpoint(src, "d", "src"),
+                      Endpoint(MemoryConnector(), "out", "dst"),
+                      opts, task_id="ts-1", sync=True)
+    assert task.status == task.SUCCEEDED
+    mgr.shutdown(wait=False)
+    return task, clock
+
+
+def test_event_timestamps_are_model_time_and_deterministic(tmp_path):
+    """events/_rate_samples used to be stamped with time.monotonic();
+    two same-seed runs now produce byte-identical timelines, and every
+    stamp lies within the run's model-time span."""
+    t1, c1 = _timestamp_run(tmp_path, "run1")
+    t2, c2 = _timestamp_run(tmp_path, "run2")
+    assert t1.events == t2.events
+    assert list(t1._rate_samples) == list(t2._rate_samples)
+    # model-time stamps: bounded by the clock's virtual span (wall
+    # monotonic stamps would be ~machine-uptime, far outside it)
+    span = c1.virtual_elapsed
+    assert span > 0.0
+    assert all(0.0 <= ts <= span for ts, _ in t1.events)
+    assert all(0.0 <= ts <= span for ts, _ in t1._rate_samples)
