@@ -28,12 +28,13 @@ import os
 import tempfile
 import time
 
+from repro.catalog import ReplicaCatalog
 from repro.connectors import ObjectStoreConnector, PosixConnector, make_cloud
 from repro.core import (Credential, CredentialStore, TransferManager,
                         TransferOptions)
 from repro.core.clock import Clock
 from repro.fed import FederatedCoordinator, TransferSpec
-from repro.sim.scenarios import _HoldSrc
+from repro.sim.scenarios import _HoldSrc, _MeteredSrc
 
 from .common import MB, QUICK, emit, split_dataset
 
@@ -50,10 +51,10 @@ KB = 1024
 
 
 def _build_federation(tmp: str, clock: Clock, n_sites: int,
-                      src_factory=None):
+                      src_factory=None, catalog=None):
     """One coordinator over ``n_sites`` sites: site ``i`` owns its own
     posix source root and its own emulated cloud destination."""
-    coord = FederatedCoordinator(placement="owner")
+    coord = FederatedCoordinator(placement="owner", catalog=catalog)
     endpoints = {}
     src_conns = []
     for i in range(n_sites):
@@ -192,6 +193,64 @@ def bench_handoff() -> dict:
         return {"latency_s": dt, "bytes_saved_frac": saved}
 
 
+def bench_fanout() -> dict:
+    """Fan-out dedupe through the replica catalog: N identical
+    submissions against one federation must collapse to ~1 real
+    transfer plus N-1 verified replica reads at the destination.
+    Reports bytes-NOT-moved from the source and the catalog hit rate —
+    the two columns the CI bench-regression gate guards."""
+    n_fanout = 4
+    with tempfile.TemporaryDirectory() as tmp:
+        clock = Clock(scale=0.0)
+        meters = {}
+
+        def src_factory(i, conn):
+            meters[i] = _MeteredSrc(conn)
+            return meters[i]
+
+        catalog = ReplicaCatalog()
+        coord, _ = _build_federation(tmp, clock, 1,
+                                     src_factory=src_factory,
+                                     catalog=catalog)
+        per_task_bytes = FILES_PER_TASK * FILE_KB * 1024
+        parts = split_dataset(per_task_bytes, FILES_PER_TASK)
+        _seed_task_files(tmp, 0, "fan0", parts)
+        # integrity on: the catalog only trusts §7-folded content keys
+        opts = TransferOptions(concurrency=2, startup_cost=0.0,
+                               coalesce_threshold=0, integrity=True)
+
+        def spec(k: int) -> TransferSpec:
+            return TransferSpec.new(
+                f"fanout-{k}", "src-s0", "fan0", "dst-s0", f"bkt/fan{k}",
+                tenant=("alice", "bob")[k % 2], options=opts,
+                n_files=FILES_PER_TASK, nbytes=per_task_bytes)
+
+        # the one real transfer populates the catalog ...
+        tasks = [coord.submit(spec(0).to_json())]
+        assert coord.wait_all(timeout=600), "fan-out seed did not finish"
+        # ... then the fan-out rides it
+        tasks += [coord.submit(spec(k).to_json())
+                  for k in range(1, n_fanout)]
+        assert coord.wait_all(timeout=600), "fan-out did not finish"
+        for t in tasks:
+            assert t.status == t.SUCCEEDED, t.events[-3:]
+        coord.assert_third_party()
+
+        source_bytes = meters[0].sent("fan0")
+        naive = n_fanout * per_task_bytes
+        moved_ratio = source_bytes / per_task_bytes
+        not_moved_frac = (naive - source_bytes) / naive
+        hit_rate = catalog.hit_rate()
+        emit("fed.fanout.dedupe", 0.0,
+             f"moved_ratio={moved_ratio:.3f} hit_rate={hit_rate:.2f} "
+             f"bytes_not_moved={not_moved_frac:.2%} of "
+             f"{naive // KB}KB nominal")
+        coord.shutdown(wait=False)
+        return {"n_fanout": n_fanout, "moved_ratio": moved_ratio,
+                "hit_rate": hit_rate,
+                "bytes_not_moved_frac": not_moved_frac}
+
+
 def bench_spec_roundtrip() -> dict:
     n = 200 if QUICK else 1000
     markers = {"files": {
@@ -215,7 +274,7 @@ def bench_spec_roundtrip() -> dict:
 
 def run() -> dict:
     return {"goodput": bench_goodput(), "handoff": bench_handoff(),
-            "spec": bench_spec_roundtrip()}
+            "fanout": bench_fanout(), "spec": bench_spec_roundtrip()}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,153 @@
+"""Bench-regression gate: compare a fresh quick-mode run against the
+committed ``BENCH_<suite>.json`` baselines and exit nonzero when a
+guarded metric regressed past its tolerance.
+
+The guard list is deliberately short and names only metrics that are
+stable under the model clock (catalog dedupe ratios, fitted-model
+quality) plus the headline goodput numbers — each with its own
+tolerance, because a timing metric on a shared CI runner deserves more
+slack than a deterministic byte count.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --out /tmp/fresh \
+        --only perfile,federation
+    PYTHONPATH=src python -m benchmarks.diff --current-dir /tmp/fresh
+
+Exit codes: 0 all guards within tolerance, 1 regression (or a guarded
+metric vanished), 2 usage/missing baseline file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Guard:
+    """One gated metric: ``path`` is a dot-joined key path into the
+    suite's ``BENCH_<suite>.json``; ``better`` says which direction is
+    good; ``tol`` is the allowed fractional move the *bad* way."""
+
+    suite: str
+    path: str
+    better: str  # "higher" | "lower"
+    tol: float
+    note: str = ""
+
+
+#: the guarded metrics.  Dedupe ratios and model-fit quality are
+#: near-deterministic (tight tolerance); goodput is wall-clock derived
+#: (looser, but still tight enough to catch a real ~20% regression).
+GUARDS: tuple[Guard, ...] = (
+    Guard("federation", "fanout.moved_ratio", "lower", 0.05,
+          "fan-out must collapse to ~1 real transfer"),
+    Guard("federation", "fanout.hit_rate", "higher", 0.10,
+          "catalog replica hit rate across the fan-out"),
+    Guard("federation", "fanout.bytes_not_moved_frac", "higher", 0.10,
+          "source bytes the catalog spared"),
+    Guard("federation", "goodput.2.goodput_mb_s", "higher", 0.15,
+          "2-site fleet goodput"),
+    Guard("perfile", "s3/conn-local/up.rho", "higher", 0.05,
+          "Eq. 4 linearity on the reference route"),
+    Guard("perfile", "s3/conn-local/up.t0_speedup", "higher", 0.30,
+          "batched data plane per-file overhead win"),
+)
+
+
+def _get(tree: dict, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def compare(baselines: dict, currents: dict,
+            guards: tuple[Guard, ...] = GUARDS) -> list[dict]:
+    """Evaluate every guard; returns one row per guard with a
+    ``status`` of ``ok`` / ``regressed`` / ``missing`` (metric or suite
+    vanished from the fresh run) / ``new`` (no baseline yet — skipped,
+    never failed).  ``baselines``/``currents`` map suite name -> loaded
+    BENCH json."""
+    rows = []
+    for g in guards:
+        base = _get(baselines.get(g.suite) or {}, g.path)
+        cur = _get(currents.get(g.suite) or {}, g.path)
+        row = {"suite": g.suite, "metric": g.path, "better": g.better,
+               "tol": g.tol, "base": base, "cur": cur, "note": g.note}
+        if base is None:
+            row["status"] = "new"
+        elif cur is None or not isinstance(cur, (int, float)) \
+                or isinstance(cur, bool):
+            row["status"] = "missing"
+        else:
+            delta = (cur - base) / abs(base) if base else (
+                0.0 if cur == base else float("inf"))
+            row["delta"] = delta
+            bad = delta < -g.tol if g.better == "higher" else delta > g.tol
+            row["status"] = "regressed" if bad else "ok"
+        rows.append(row)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    """Readable delta table, one line per guard."""
+    out = [f"{'status':10s} {'suite':12s} {'metric':34s} "
+           f"{'base':>12s} {'current':>12s} {'delta':>8s}  tol"]
+    for r in rows:
+        base = f"{r['base']:.4g}" if isinstance(
+            r["base"], (int, float)) else "-"
+        cur = f"{r['cur']:.4g}" if isinstance(
+            r["cur"], (int, float)) else "-"
+        delta = f"{r['delta']:+.1%}" if "delta" in r else "-"
+        out.append(f"{r['status']:10s} {r['suite']:12s} "
+                   f"{r['metric']:34s} {base:>12s} {cur:>12s} "
+                   f"{delta:>8s}  ±{r['tol']:.0%} ({r['better']} better)")
+    return "\n".join(out)
+
+
+def load_suites(directory: str, suites) -> dict:
+    out = {}
+    for name in suites:
+        path = os.path.join(directory, f"BENCH_{name}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                out[name] = json.load(f)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="compare fresh bench results against committed "
+                    "baselines; nonzero exit on regression")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory with committed BENCH_<suite>.json")
+    ap.add_argument("--current-dir", required=True,
+                    help="directory with the fresh run's baselines")
+    args = ap.parse_args()
+
+    suites = sorted({g.suite for g in GUARDS})
+    baselines = load_suites(args.baseline_dir, suites)
+    currents = load_suites(args.current_dir, suites)
+    if not baselines:
+        print(f"no BENCH_*.json baselines under {args.baseline_dir} "
+              f"for suites {','.join(suites)}", file=sys.stderr)
+        return 2
+
+    rows = compare(baselines, currents)
+    print(format_table(rows))
+    bad = [r for r in rows if r["status"] in ("regressed", "missing")]
+    if bad:
+        print(f"\nbench-diff FAILED: {len(bad)} guarded metric(s) "
+              "regressed or vanished", file=sys.stderr)
+        return 1
+    print(f"\nbench-diff ok: {len(rows)} guards within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

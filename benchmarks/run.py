@@ -2,12 +2,16 @@
 benches.  Prints ``name,us_per_call,derived`` CSV rows (us_per_call is
 model-microseconds for emulated-transfer benches; see common.py).
 
-When the ``perfile`` suite runs, the fitted models are also written to
-``BENCH_perfile.json`` (per route: t0, throughput, rho, and — where the
-batched data plane was fitted — t0_batched and the speedup), so the
-per-file-overhead trajectory is tracked across PRs.
+Every suite that runs also persists its result dict as
+``BENCH_<suite>.json`` (stable name, sorted keys) — the committed
+baselines the ``bench-diff`` CI lane compares fresh runs against (see
+:mod:`benchmarks.diff`).  ``perfile`` keeps its richer model dump (per
+route: t0, throughput, rho, and — where the batched data plane was
+fitted — t0_batched and the speedup), so the per-file-overhead
+trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                            [--out DIR]
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import json
+import math
 import os
 import sys
 import time
@@ -63,12 +68,38 @@ def _write_perfile_json(models: dict, path: str = "BENCH_perfile.json") -> None:
     print(f"# wrote {path} ({len(out)} routes)", file=sys.stderr)
 
 
+def _sanitize(value):
+    """JSON-clean a suite result: stringify exotic keys/values, keep
+    numbers (non-finite floats become strings so json stays strict)."""
+    if isinstance(value, dict):
+        return {str(k): _sanitize(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_sanitize(v) for v in value]
+    if isinstance(value, bool) or value is None or isinstance(value, str):
+        return value
+    if isinstance(value, int):
+        return value
+    if isinstance(value, float):
+        return value if math.isfinite(value) else str(value)
+    return str(value)
+
+
+def _write_suite_json(name: str, result: dict, out_dir: str) -> None:
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(_sanitize(result), f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small N / fewer providers")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: " + ",".join(SUITES))
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_<suite>.json baselines "
+                         "(default: cwd)")
     args = ap.parse_args()
     wanted = (args.only.split(",") if args.only else list(SUITES))
     unknown = [name for name in wanted if name not in SUITES]
@@ -97,7 +128,11 @@ def main() -> None:
             failed.append(name)
             continue
         if name == "perfile" and result:
-            _write_perfile_json(result)
+            _write_perfile_json(result,
+                                path=os.path.join(args.out,
+                                                  "BENCH_perfile.json"))
+        elif result:
+            _write_suite_json(name, result, args.out)
     print(f"# total wall: {time.monotonic() - t0:.1f}s", file=sys.stderr)
     if failed:
         print(f"# FAILED suites: {','.join(failed)}", file=sys.stderr)

@@ -6,18 +6,24 @@ pushing:
     python scripts/ci_check.py            # full matrix
     python scripts/ci_check.py --fast     # skip the chaos/slow lane
     python scripts/ci_check.py --only tier1,bench
+    python scripts/ci_check.py bench-diff # lanes as positional args too
 
 Lanes:
-  hygiene  fail on tracked bytecode artifacts (__pycache__ / *.pyc)
-  compile  byte-compile src/benchmarks/examples/scripts/tests
-  fed      PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
-  svc      PYTHONPATH=src pytest -q -m "svc and not chaos and not slow"
-  tier1    PYTHONPATH=src pytest -x -q
-           -m "not chaos and not slow and not fed and not svc"
-  degraded PYTHONPATH=src pytest -q tests/test_degraded_scenarios.py
-           -m "chaos or fed"  (health plane: brownout / death / failover)
-  chaos    PYTHONPATH=src pytest -q -m "chaos or slow"
-  bench    PYTHONPATH=src python -m benchmarks.run --quick
+  hygiene    fail on tracked bytecode artifacts (__pycache__ / *.pyc)
+  compile    byte-compile src/benchmarks/examples/scripts/tests
+  fed        PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
+  svc        PYTHONPATH=src pytest -q -m "svc and not chaos and not slow"
+  catalog    PYTHONPATH=src pytest -q
+             -m "catalog and not chaos and not slow"
+  tier1      PYTHONPATH=src pytest -x -q
+             -m "not chaos and not slow and not fed and not svc and not catalog"
+  degraded   PYTHONPATH=src pytest -q tests/test_degraded_scenarios.py
+             -m "chaos or fed"  (health plane: brownout / death / failover)
+  chaos      PYTHONPATH=src pytest -q -m "chaos or slow"
+  bench      PYTHONPATH=src python -m benchmarks.run --quick
+  bench-diff quick-run the guarded suites into a temp dir and compare
+             against the committed BENCH_*.json baselines
+             (benchmarks.diff); nonzero exit on regression
 """
 
 from __future__ import annotations
@@ -39,6 +45,22 @@ _HYGIENE_SNIPPET = (
     "print('\\n'.join(bad))\n"
     "sys.exit(1 if bad else 0)\n")
 
+#: mirrors the CI "Bench regression gate" step: fresh quick-mode run of
+#: the guarded suites into a temp dir, then benchmarks.diff against the
+#: committed baselines in the repo root
+_BENCH_DIFF_SNIPPET = (
+    "import subprocess, sys, tempfile\n"
+    "with tempfile.TemporaryDirectory() as tmp:\n"
+    "    rc = subprocess.run([sys.executable, '-m', 'benchmarks.run',\n"
+    "                         '--quick', '--only', 'perfile,federation',\n"
+    "                         '--out', tmp],\n"
+    "                        stdout=subprocess.DEVNULL).returncode\n"
+    "    if rc:\n"
+    "        sys.exit(rc)\n"
+    "    sys.exit(subprocess.run([sys.executable, '-m',\n"
+    "                             'benchmarks.diff',\n"
+    "                             '--current-dir', tmp]).returncode)\n")
+
 LANES: dict[str, list[str]] = {
     "hygiene": [sys.executable, "-c", _HYGIENE_SNIPPET],
     "compile": [sys.executable, "-m", "compileall", "-q",
@@ -52,8 +74,13 @@ LANES: dict[str, list[str]] = {
     # are deliberately unmarked and run in tier1)
     "svc": [sys.executable, "-m", "pytest", "-q",
             "-m", "svc and not chaos and not slow"],
+    # replica catalog: dedupe, eviction, staleness — its chaos-grade
+    # fan-out scenario carries both marks and lands in "chaos"
+    "catalog": [sys.executable, "-m", "pytest", "-q",
+                "-m", "catalog and not chaos and not slow"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
-              "-m", "not chaos and not slow and not fed and not svc"],
+              "-m", "not chaos and not slow and not fed and not svc "
+                    "and not catalog"],
     # mirrors the CI chaos job's named degraded-mode step (health plane)
     "degraded": [sys.executable, "-m", "pytest", "-q",
                  "tests/test_degraded_scenarios.py",
@@ -61,6 +88,7 @@ LANES: dict[str, list[str]] = {
     "chaos": [sys.executable, "-m", "pytest", "-q",
               "-m", "chaos or slow"],
     "bench": [sys.executable, "-m", "benchmarks.run", "--quick"],
+    "bench-diff": [sys.executable, "-c", _BENCH_DIFF_SNIPPET],
 }
 
 
@@ -88,10 +116,13 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated lane subset: "
                          + ",".join(LANES))
+    ap.add_argument("lanes", nargs="*",
+                    help="lane names as positional args "
+                         "(same as --only)")
     args = ap.parse_args()
     wanted = list(LANES)
-    if args.only:
-        wanted = args.only.split(",")
+    if args.only or args.lanes:
+        wanted = (args.only.split(",") if args.only else []) + args.lanes
         unknown = [w for w in wanted if w not in LANES]
         if unknown:
             print(f"unknown lane(s): {','.join(unknown)}", file=sys.stderr)

@@ -277,13 +277,18 @@ class TransferManager:
                  per_endpoint_cap: int | None = 2,
                  share_sessions: bool = True, refit_every: int = 8,
                  history_limit: int = 64, site_id: str = "",
-                 health=None, **service_kw):
+                 health=None, catalog=None, **service_kw):
         self.service = service or TransferService(**service_kw)
         if health is not None:
             # shared health plane: the data plane's retry loop and this
             # scheduler consult the SAME registry, so a breaker opened
             # by one task's failures steers every later dispatch
             self.service.health = health
+        if catalog is not None:
+            # shared replica plane: the data plane publishes/serves
+            # replicas from the SAME catalog this scheduler (and the
+            # federation digest exchange) scores placement against
+            self.service.catalog = catalog
         self.advisor = advisor
         #: federation identity: which site control plane this manager is
         #: (stamped into TaskStats.site so attribution survives handoff)
@@ -334,6 +339,12 @@ class TransferManager:
         """The shared :class:`~repro.core.health.EndpointHealth` registry
         (``None`` when the health plane is off)."""
         return self.service.health
+
+    @property
+    def catalog(self):
+        """The shared :class:`~repro.catalog.ReplicaCatalog` (``None``
+        when the replica plane is off)."""
+        return self.service.catalog
 
     # ---- service plane: mutation signal + event publication --------------
     def _touch_locked(self, etype: str | None = None,
@@ -437,7 +448,12 @@ class TransferManager:
                 if key not in estimates:
                     estimates[key] = self._estimate_workload(cand.src)
                 workload = estimates[key]
-            _, cc, predicted = Advisor([route]).best(*workload)
+            catalog = self.service.catalog
+            replica_bytes = 0 if catalog is None else catalog.held_bytes_at(
+                (cand.dst.resolved_id(),), cand.src.resolved_id(),
+                cand.src.path)
+            _, cc, predicted = Advisor([route]).best(
+                *workload, replica_bytes=replica_bytes)
             health = self.service.health
             if health is not None and health.denied(cand.src.resolved_id(),
                                                     cand.dst.resolved_id()):
@@ -851,6 +867,12 @@ class TransferManager:
                       "actual_model_seconds": st.actual_model_seconds,
                       "resumes": st.resumes},
             "markers": self.service.markers.export_state(task_id),
+            # replica hints: where verified copies of this source
+            # already live, so the adopting site's catalog can satisfy
+            # the task by replica reads (hints are re-validated there)
+            "replicas": (self.service.catalog.export_hints(
+                sub.src.resolved_id(), sub.src.path)
+                if self.service.catalog is not None else []),
         }
         self.service.markers.clear(task_id)
         self.service.clock.forget(task_id)
@@ -893,6 +915,9 @@ class TransferManager:
         markers = payload.get("markers")
         if markers and markers.get("files"):
             self.service.markers.import_state(task.task_id, markers)
+        if self.service.catalog is not None:
+            for hint in payload.get("replicas", []) or []:
+                self.service.catalog.merge_hint(hint)
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("manager is shut down")
@@ -955,6 +980,7 @@ class TransferManager:
                                else min(1.0, n / budget))
                           for ep, n in self._active_eps.items()}
             health = self.service.health
+            catalog = self.service.catalog
             snap = {"site_id": self.site_id,
                     "queued": len(self._queued),
                     "running": len(self._running),
@@ -964,6 +990,14 @@ class TransferManager:
                     "unavailable_endpoints":
                         sorted(health.unavailable()) if health is not None
                         else [],
+                    # replica plane: stats + per-source held-bytes map so
+                    # a federation coordinator can score replica hits.
+                    # Rides the queue-state etag: completions (the only
+                    # durable publishes that matter for placement) always
+                    # mutate the queue, so freshness tracks the cache.
+                    "catalog": ({"stats": catalog.stats(),
+                                 "sources": catalog.source_summary()}
+                                if catalog is not None else {}),
                     "etag": self._generation}
             self._digest_cache = snap
             self.metrics.digest_misses += 1

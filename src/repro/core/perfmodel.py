@@ -137,16 +137,25 @@ class Advisor:
         self.routes.append(route)
 
     def best(self, n_files: int, nbytes: int,
-             objective: str = "throughput") -> tuple[Route, int, float]:
-        """Returns (route, concurrency, predicted_seconds)."""
+             objective: str = "throughput",
+             replica_bytes: int = 0) -> tuple[Route, int, float]:
+        """Returns (route, concurrency, predicted_seconds).
+
+        ``replica_bytes`` — bytes a replica catalog already holds near
+        the route's destination — are subtracted from the wire term
+        (and from billable egress): a cataloged range is a local
+        replica read, not a source read.  Per-file overhead and startup
+        cost stay — the control-channel work per file happens either
+        way (Eq. 4's ``N*t0 + S0`` terms are not about bytes)."""
         if not self.routes:
             raise ValueError("no routes registered")
+        wire_bytes = max(0, nbytes - max(0, replica_bytes))
         best = None
         for r in self.routes:
             for cc in _cc_ladder(r.max_concurrency):
-                t = r.model.predict(n_files, nbytes, cc)
+                t = r.model.predict(n_files, wire_bytes, cc)
                 cost = t if objective == "throughput" else (
-                    t + r.cost_per_gb_egress * nbytes / 1e9)
+                    t + r.cost_per_gb_egress * wire_bytes / 1e9)
                 if best is None or cost < best[3]:
                     best = (r, cc, t, cost)
         return best[0], best[1], best[2]

@@ -196,6 +196,13 @@ class TaskStats:
     integrity_failures: int = 0
     #: files a coalesced batch handed back to the per-file retry path
     batch_fallbacks: int = 0
+    #: files satisfied from the replica catalog (a near-destination
+    #: replica read instead of a source read) and the bytes they saved
+    #: the wire; ``replica_fallbacks`` counts replica reads that failed
+    #: validation (stale/corrupt/evicted) and fell back to a transfer
+    replica_hits: int = 0
+    replica_bytes: int = 0
+    replica_fallbacks: int = 0
     #: transient-fault retries keyed by error class name (observability
     #: for fault schedules: RateLimitError / FaultInjected / ...)
     retries_by_kind: dict = field(default_factory=dict)
@@ -307,6 +314,17 @@ class TransferTask:
     def _note_batch_fallback(self) -> None:
         with self._lock:
             self.stats.batch_fallbacks += 1
+
+    def _note_replica(self, nbytes: int) -> None:
+        """Account one file served from the replica catalog — ``nbytes``
+        never crossed the source's wire."""
+        with self._lock:
+            self.stats.replica_hits += 1
+            self.stats.replica_bytes += nbytes
+
+    def _note_replica_fallback(self) -> None:
+        with self._lock:
+            self.stats.replica_fallbacks += 1
 
     def _note_probe(self) -> None:
         """Account one attempt admitted as a half-open breaker probe —
@@ -955,7 +973,7 @@ class TransferService:
 
     def __init__(self, credential_store: CredentialStore | None = None,
                  marker_root: str | None = None, clock: Clock | None = None,
-                 data_link_factory=None, health=None):
+                 data_link_factory=None, health=None, catalog=None):
         self.creds = credential_store or CredentialStore()
         self.markers = MarkerStore(marker_root or os.path.join(
             os.environ.get("TMPDIR", "/tmp"), "repro-markers"))
@@ -964,6 +982,12 @@ class TransferService:
         #: registry; when set, every attempt is gated by the endpoint
         #: circuit breakers + retry budgets and reports its outcome back
         self.health = health
+        #: optional shared :class:`~repro.catalog.ReplicaCatalog`; when
+        #: set (and integrity is on — the fold is the content address),
+        #: finished files are published at durable-commit time and new
+        #: files are satisfied by verified near-destination replica
+        #: reads instead of source reads whenever a fresh entry exists
+        self.catalog = catalog
         self._link_factory = data_link_factory or self._default_link
         self._tasks: dict[str, TransferTask] = {}
         self._manager = None
@@ -1160,12 +1184,30 @@ class TransferService:
                 task.stats.bytes_done += sum(ln for _, ln in st.get("done", []))
             pending.append((sp, dp, sz))
 
+        # replica-aware routing: a file with a fresh catalog entry at
+        # the destination endpoint is kept on the per-file path (where
+        # the replica read lives) even when it is batch-sized — a bulk
+        # source exchange would move exactly the bytes the catalog says
+        # need not move.  peek(), not lookup(): routing is not serving.
+        cat_hits: set[str] = set()
+        if self.catalog is not None and opt.integrity:
+            src_id, dst_id = src.resolved_id(), dst.resolved_id()
+            for sp, dp, sz in pending:
+                stp = fstate.get(sp) or {}
+                if sz > 0 and not stp.get("done") \
+                        and stp.get("src_sig") is not None \
+                        and self.catalog.peek(src_id, sp, stp["src_sig"],
+                                              dst_id) is not None:
+                    cat_hits.add(sp)
+
         # coalesce the small-file tail into pipelined batches (§5.3.2);
         # a lone small file gains nothing from the bulk path
         small: list[tuple[str, str, int]] = []
         large: list[tuple[str, str, int]] = []
         for item in pending:
-            if opt.coalesce_threshold and item[2] < opt.coalesce_threshold:
+            if item[0] in cat_hits:
+                large.append(item)
+            elif opt.coalesce_threshold and item[2] < opt.coalesce_threshold:
                 small.append(item)
             else:
                 large.append(item)
@@ -1438,6 +1480,8 @@ class TransferService:
                 self.markers.append(task.task_id, e.spath,
                                     {"done": e.st["done"], "complete": True,
                                      "checksum": checksum})
+                self._publish_replica(src, dst, e.st, e.spath, e.dpath,
+                                      e.size, checksum)
             except Exception as exc:
                 # no finalize error may escape the worker thread (that
                 # would silently drop the remaining work items) — the
@@ -1468,6 +1512,18 @@ class TransferService:
                       spath: str, dpath: str, size: int) -> None:
         result = FileResult(spath, dpath, size)
         st = fstate.setdefault(spath, {"done": [], "complete": False})
+        if self.catalog is not None and opt.integrity:
+            try:
+                if self._try_replica(task, src, dst, s_dst, opt, st,
+                                     spath, dpath, size):
+                    return
+            except TaskInterrupted:
+                # pause/cancel mid-replica-read: _try_replica already
+                # discarded the unverified partial bytes, so the
+                # checkpoint is clean and the resume re-decides
+                self.markers.append(task.task_id, spath,
+                                    self._checkpoint_record(st))
+                return
         attempts = 0
         integrity_budget = opt.max_integrity_retries
         health = self.health
@@ -1543,6 +1599,8 @@ class TransferService:
                     self.markers.append(task.task_id, spath,
                                         {"done": st["done"], "complete": True,
                                          "checksum": checksum})
+                    self._publish_replica(src, dst, st, spath, dpath, size,
+                                          checksum)
                     task.stats.files_done += 1
                     task.files.append(result)
                     return
@@ -1620,6 +1678,159 @@ class TransferService:
         task.stats.files_failed += 1
         task.files.append(result)
         task.log(f"FAILED {spath}: {result.error}")
+
+    # ---- replica catalog (content-addressed dedupe) ------------------------
+    def _publish_replica(self, src: Endpoint, dst: Endpoint, st: dict,
+                         spath: str, dpath: str, size: int,
+                         checksum: str | None) -> None:
+        """Index a durably-committed file in the replica catalog.  The
+        §7 fold already produced the content address (``checksum``) and
+        the expansion stat stamped the source signature — publishing is
+        a dict insert, nearly free on the hot path."""
+        if self.catalog is None or not checksum or size <= 0:
+            return
+        sig = st.get("src_sig")
+        if sig is None:
+            return  # integrity off: no signature to validate against
+        digests = st.get("digests") \
+            if checksum.startswith(COMPOSITE_PREFIX) else None
+        self.catalog.publish(content=checksum, size=size, src_sig=sig,
+                             src_endpoint=src.resolved_id(), src_path=spath,
+                             endpoint_id=dst.resolved_id(), path=dpath,
+                             digests=digests)
+
+    def _try_replica(self, task: TransferTask, src: Endpoint, dst: Endpoint,
+                     s_dst: Session, opt: TransferOptions, st: dict,
+                     spath: str, dpath: str, size: int) -> bool:
+        """Satisfy one file from a fresh near-destination replica: a
+        local (dst-endpoint) read of the cataloged copy instead of a
+        source read, with the §7 fold re-verifying the streamed bytes
+        against the entry's content address AND the usual re-read
+        verification at the destination.  Returns True when the file
+        was completed this way; any validation failure invalidates the
+        entry, discards the unverified bytes, and returns False so the
+        normal transfer path moves the real bytes — a bad replica costs
+        a wasted local read, never a wrong byte."""
+        sig = st.get("src_sig")
+        if sig is None or size <= 0 or st.get("complete") or st.get("done"):
+            return False
+        entry = self.catalog.lookup(src.resolved_id(), spath, sig,
+                                    dst.resolved_id())
+        if entry is None or entry.size != size:
+            return False
+        tracker = IntervalTracker()
+        try:
+            if entry.path == dpath:
+                # the destination already holds the bytes (an identical
+                # resubmission): verify in place, move nothing
+                if not self._verify(dst, s_dst, dpath, entry.content, opt,
+                                    digests=entry.digests or None):
+                    raise IntegrityError(dpath)
+                task._bytes_tick(size)  # accounted done, nothing moved
+            else:
+                self._replica_stream(task, dst, s_dst, opt, entry, dpath,
+                                     size, tracker)
+                if self._should_verify(spath, opt) \
+                        and not self._verify(dst, s_dst, dpath, entry.content,
+                                             opt,
+                                             digests=entry.digests or None):
+                    raise IntegrityError(dpath)
+        except TaskInterrupted:
+            # discard the unverified partial bytes before the caller
+            # checkpoints: a resume must re-send (or re-replicate) them
+            task._bytes_tick(-tracker.covered)
+            st["done"] = []
+            st.pop("digests", None)
+            raise
+        except Exception as exc:
+            self.catalog.invalidate(entry)
+            task._note_replica_fallback()
+            task._bytes_tick(-tracker.covered)
+            st["done"] = []
+            st.pop("digests", None)
+            self.markers.append(task.task_id, spath,
+                                {"done": [], "reset_digests": True})
+            task.log(f"replica read of {entry.path} for {dpath} failed "
+                     f"({type(exc).__name__}); falling back to transfer")
+            return False
+        st["done"] = [[0, size]]
+        st["complete"] = True
+        st["checksum"] = entry.content
+        self.markers.append(task.task_id, spath,
+                            {"done": st["done"], "complete": True,
+                             "checksum": entry.content})
+        task._note_replica(size)
+        task.stats.files_done += 1
+        task.files.append(FileResult(spath, dpath, size, attempts=1,
+                                     checksum=entry.content, ok=True))
+        task.log(f"replica hit: {dpath} served from {entry.path} "
+                 f"({size} bytes not moved from source)")
+        # the new copy is itself a replica — index it so the next
+        # fan-out member can read whichever copy is least-recently-used
+        self.catalog.publish(content=entry.content, size=size, src_sig=sig,
+                             src_endpoint=src.resolved_id(), src_path=spath,
+                             endpoint_id=dst.resolved_id(), path=dpath,
+                             digests=entry.digests or None)
+        return True
+
+    def _replica_stream(self, task: TransferTask, dst: Endpoint,
+                        s_dst: Session, opt: TransferOptions, entry,
+                        dpath: str, size: int,
+                        tracker: IntervalTracker) -> None:
+        """Stream ``entry.path`` -> ``dpath`` within the destination
+        endpoint (loopback data channel) and fold the bytes read; a
+        fold that does not reproduce ``entry.content`` exactly raises.
+        A composite content address is re-folded over the entry's own
+        segment boundaries; a plain one through the whole-file hash."""
+        link = self._link_factory(dst.connector, dst.connector)
+        composite = entry.content.startswith(COMPOSITE_PREFIX)
+        digester = None
+        if composite:
+            segs = sorted((_key_range(k) for k in entry.digests),
+                          key=lambda r: r[0])
+            digester = RangeDigester([ByteRange(o, ln) for o, ln in segs],
+                                     opt.checksum_algorithm)
+
+        def on_written(offset: int, length: int) -> None:
+            task._bytes_tick(length)
+            tracker.add(offset, length)
+
+        pipe = _FilePipe(size, [ByteRange(0, size)], link, opt, on_written,
+                         None if composite else opt.checksum_algorithm,
+                         abort=task.interrupt_exc, digester=digester)
+        send_err: list[Exception] = []
+
+        def do_send() -> None:
+            try:
+                dst.connector.send(s_dst, entry.path, pipe.send_channel)
+            except Exception as e:
+                send_err.append(e)
+                pipe.fail(e)
+
+        sender = threading.Thread(target=bind_charge_owner(do_send),
+                                  daemon=True)
+        sender.start()
+        recv_err: Exception | None = None
+        try:
+            dst.connector.recv(s_dst, dpath, pipe.recv_channel)
+        except Exception as e:
+            recv_err = e
+        sender.join()
+        if send_err:
+            raise send_err[0]
+        if recv_err is not None:
+            raise recv_err
+        if tracker.covered < size:
+            raise TruncatedStream(
+                f"replica {entry.path}: {tracker.covered} of {size} bytes")
+        if composite:
+            streamed = compose_digests(digester.digests, size,
+                                       opt.checksum_algorithm)
+        else:
+            streamed = pipe.source_checksum()
+        if streamed != entry.content:
+            raise IntegrityError(
+                f"replica {entry.path} does not match its content address")
 
     def _should_verify(self, path: str, opt: TransferOptions) -> bool:
         if opt.verify_sampling >= 1.0:

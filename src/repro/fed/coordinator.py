@@ -44,6 +44,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from ..catalog import hint_bytes
 from ..core.clock import charge_to
 from ..core.connector import Connector
 from ..core.perfmodel import Advisor
@@ -95,6 +96,11 @@ class QueueDigest:
     #: endpoint ids whose circuit breaker the site reports as open
     #: (health plane, :mod:`repro.core.health`)
     unavailable: list = field(default_factory=list)
+    #: replica-plane summary from the site's catalog —
+    #: ``{"stats": {...}, "sources": {source_key: bytes}}`` — so
+    #: placement can score replica hits without touching the site
+    #: (see :mod:`repro.catalog`); empty when the site has no catalog
+    catalog: dict = field(default_factory=dict)
     #: the site manager's queue-state generation this digest reflects;
     #: an unchanged etag means the site's queue has not mutated, so the
     #: coordinator reuses the previous digest instead of rebuilding
@@ -213,8 +219,15 @@ class FederatedCoordinator:
     def __init__(self, placement: str = "owner", name: str = "fed",
                  digest_every: int = 4, miss_threshold: int = 3,
                  rebalance: RebalancePolicy | None = None,
-                 bus: StatusBus | None = None):
+                 bus: StatusBus | None = None, catalog=None):
         self.placement = placement
+        #: optional federation-wide :class:`~repro.catalog.ReplicaCatalog`
+        #: installed on every registered site that has none of its own —
+        #: the dedupe-aware-routing convenience for in-process fleets.
+        #: The coordinator itself only ever reads digests (metadata):
+        #: replica reads happen on site data planes, so third-party
+        #: semantics are untouched.
+        self.catalog = catalog
         #: service plane: placement/failover/beat event stream; events
         #: are stamped with the involved site's model clock when one is
         #: known (the coordinator itself has no clock — third party)
@@ -257,6 +270,9 @@ class FederatedCoordinator:
                 raise ValueError(f"site {site_id!r} already registered")
             if not manager.site_id:
                 manager.site_id = site_id
+            if self.catalog is not None \
+                    and manager.service.catalog is None:
+                manager.service.catalog = self.catalog
             site = SiteHandle(site_id, manager, endpoints, owns)
             self._sites[site_id] = site
             return site
@@ -316,6 +332,7 @@ class FederatedCoordinator:
                 in_flight_bytes=d["in_flight_bytes"],
                 saturation=d["saturation"],
                 unavailable=list(d.get("unavailable_endpoints", [])),
+                catalog=dict(d.get("catalog", {}) or {}),
                 etag=etag)
             out[site.site_id] = site.digest
         self.metrics.digest_exchanges += 1
@@ -450,25 +467,53 @@ class FederatedCoordinator:
         if self.placement == "owner":
             owners = [s for s in candidates if spec.src_endpoint in s.owns]
             pool = owners or candidates
-            return min(pool, key=lambda s: s.load())
+            # replica-aware tiebreak: equal load, prefer the site whose
+            # catalog already holds more of this source (dedupe-aware
+            # routing — bytes it will not have to move)
+            return min(pool, key=lambda s: (s.load(),
+                                            -self._replica_bytes(s, spec)))
         if self.placement == "least-loaded":
-            return min(candidates, key=lambda s: s.load())
+            return min(candidates,
+                       key=lambda s: (s.load(),
+                                      -self._replica_bytes(s, spec)))
         if self.placement == "advisor":
             return min(candidates, key=lambda s: self._predicted(s, spec))
         raise ValueError(f"unknown placement policy {self.placement!r}")
 
     @staticmethod
-    def _predicted(site: SiteHandle, spec: TransferSpec) -> float:
+    def _replica_bytes(site: SiteHandle, spec: TransferSpec) -> int:
+        """Bytes the site's replica catalog reports already holding for
+        the spec's source — scored from the last exchanged digest (the
+        metadata plane), with a live-catalog fallback before the first
+        exchange.  Clamped to the workload hint so a stale summary can
+        never make a transfer look free-er than its own size."""
+        d = site.digest
+        sources = d.catalog.get("sources", {}) if d is not None else {}
+        if not sources:
+            cat = getattr(site.manager, "catalog", None)
+            if cat is None:
+                return 0
+            held = cat.held_bytes_at((spec.dst_endpoint,),
+                                     spec.src_endpoint, spec.src_path)
+        else:
+            held = hint_bytes(sources, spec.src_endpoint, spec.src_path)
+        return min(held, spec.nbytes) if spec.nbytes else held
+
+    def _predicted(self, site: SiteHandle, spec: TransferSpec) -> float:
         """Predicted completion on ``site``: the Advisor's route model
-        for this workload, serialized behind the site's current queue
-        depth (depth+1 workloads of this shape, a deliberately simple
-        backlog model).  Sites without a fitted advisor sort last."""
+        for this workload — minus the bytes the site's replica catalog
+        says need not cross the wire — serialized behind the site's
+        current queue depth (depth+1 workloads of this shape, a
+        deliberately simple backlog model).  Sites without a fitted
+        advisor sort last."""
         adv = site.manager.advisor
         if adv is None or not adv.routes:
             return float("inf")
         route = next((r for r in adv.routes if r.name == spec.route),
                      adv.routes[0])
-        _, _, eta = Advisor([route]).best(max(1, spec.n_files), spec.nbytes)
+        _, _, eta = Advisor([route]).best(
+            max(1, spec.n_files), spec.nbytes,
+            replica_bytes=self._replica_bytes(site, spec))
         return eta * (1 + site.load())
 
     # ---- submission ------------------------------------------------------

@@ -57,6 +57,12 @@ class TransferSpec:
     origin_site: str = ""
     stats: dict = field(default_factory=dict)
     markers: dict = field(default_factory=lambda: {"files": {}})
+    #: replica hints: JSON-clean catalog entry dicts naming verified
+    #: copies of the source that already exist (see
+    #: :mod:`repro.catalog`) — the adopting site merges and
+    #: re-validates them, so a handed-off fan-out member can still be
+    #: served by a replica read instead of a source read
+    replicas: list = field(default_factory=list)
     version: int = 1
 
     # ---- construction ----------------------------------------------------
@@ -110,6 +116,7 @@ class TransferSpec:
             "nbytes": self.nbytes,
             "stats": dict(self.stats),
             "markers": self.markers,
+            "replicas": list(self.replicas),
         }
 
     @classmethod
@@ -130,6 +137,7 @@ class TransferSpec:
             origin_site=payload.get("origin_site", ""),
             stats=dict(payload.get("stats", {})),
             markers=payload.get("markers") or {"files": {}},
+            replicas=list(payload.get("replicas", []) or []),
             version=payload.get("version", 1),
         )
         spec.validate()

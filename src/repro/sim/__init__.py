@@ -23,9 +23,11 @@ sequence into the same ``TaskStats``.
 """
 
 from .scenarios import (ROUTES, TREES, DegradedScenarioResult,
-                        FederatedScenarioResult, MultiScenarioResult,
-                        ScenarioResult, ScenarioRunner, canonical_tree)
+                        FanoutScenarioResult, FederatedScenarioResult,
+                        MultiScenarioResult, ScenarioResult, ScenarioRunner,
+                        canonical_tree)
 
 __all__ = ["ROUTES", "TREES", "DegradedScenarioResult",
-           "FederatedScenarioResult", "MultiScenarioResult",
-           "ScenarioResult", "ScenarioRunner", "canonical_tree"]
+           "FanoutScenarioResult", "FederatedScenarioResult",
+           "MultiScenarioResult", "ScenarioResult", "ScenarioRunner",
+           "canonical_tree"]

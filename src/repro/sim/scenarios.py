@@ -31,6 +31,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable
 
+from ..catalog import ReplicaCatalog
 from ..connectors import (MemoryConnector, ObjectStoreConnector,
                           PosixConnector, make_cloud)
 from ..connectors.faultproxy import FaultProxyConnector
@@ -347,6 +348,61 @@ class _HoldSrc:
         def factory(path):
             ch = channel_factory(path)
             return None if ch is None else self._held(path, ch)
+
+        self.inner.send_batch(session, paths, factory)
+
+
+class _MeteredSendChannel:
+    """Send-side AppChannel wrapper counting every byte a source
+    connector pushes into the pipe."""
+
+    def __init__(self, inner, on_write):
+        self._inner = inner
+        self._on_write = on_write
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
+
+    def write(self, offset: int, data: bytes) -> None:
+        self._on_write(len(data))
+        self._inner.write(offset, data)
+
+
+class _MeteredSrc:
+    """Transparent wrapper around a *source* connector that counts
+    bytes streamed out per path — the evidence behind the fan-out
+    dedupe invariant: N identical submissions must read the source
+    ~once, with the other N-1 satisfied by catalog replica reads (which
+    stream from the destination connector and so never show up here)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self._lock = threading.Lock()
+        self.bytes_by_path: dict[str, int] = {}
+
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+    def sent(self, prefix: str = "") -> int:
+        with self._lock:
+            return sum(n for p, n in self.bytes_by_path.items()
+                       if p.startswith(prefix))
+
+    def _on_write(self, path: str, n: int) -> None:
+        with self._lock:
+            self.bytes_by_path[path] = self.bytes_by_path.get(path, 0) + n
+
+    def _meter(self, path: str, channel):
+        return _MeteredSendChannel(
+            channel, lambda n, p=path: self._on_write(p, n))
+
+    def send(self, session, path, channel):
+        self.inner.send(session, path, self._meter(path, channel))
+
+    def send_batch(self, session, paths, channel_factory):
+        def factory(path):
+            ch = channel_factory(path)
+            return None if ch is None else self._meter(path, ch)
 
         self.inner.send_batch(session, paths, factory)
 
@@ -943,6 +999,214 @@ class ScenarioRunner:
                 + "\n  ".join(violations))
         return result
 
+    # ---- fan-out dedupe through the replica catalog ----------------------
+    def run_fanout(self, n_fanout: int = 4, tree="many-small",
+                   chaos: str = "none",
+                   options: TransferOptions | None = None,
+                   byte_budget: int | None = None, max_workers: int = 4,
+                   seed: int = 0, timeout: float = 240.0,
+                   strict: bool = False) -> "FanoutScenarioResult":
+        """Submit the SAME source tree ``n_fanout`` times (distinct
+        destination prefixes) through one manager sharing a
+        :class:`~repro.catalog.ReplicaCatalog`, and assert the dedupe
+        contract: the first task moves the tree, the other N-1 are
+        satisfied by verified replica reads at the destination — bytes
+        leaving the *source* stay ~1x the tree, and write-once
+        destination accounting still holds.
+
+        ``chaos`` injects a catalog betrayal between the first transfer
+        and the fan-out, and the invariant flips to "fall back to a
+        real transfer, never serve wrong bytes":
+
+        * ``"evict"`` — every entry is evicted before the fan-out: all
+          lookups must miss and every file is source-read again;
+        * ``"stale"`` — every source file is rewritten (mtime forced
+          forward): traveled signatures mismatch, entries are
+          invalidated, and the fan-out lands the NEW bytes;
+        * ``"corrupt"`` — the landed replica bytes are flipped in
+          place: the replica read's checksum fold must catch it,
+          invalidate the entry, and fall back.
+
+        Integrity must stay on (the default here): the catalog only
+        trusts §7-folded content keys.
+        """
+        if chaos not in ("none", "evict", "stale", "corrupt"):
+            raise ValueError(f"unknown fanout chaos {chaos!r}")
+        with self._lock:
+            self._n += 1
+            run_dir = os.path.join(self.base_dir, f"fanout{self._n:03d}")
+        os.makedirs(run_dir, exist_ok=True)
+
+        if isinstance(tree, str):
+            files, empty_dirs = canonical_tree(tree, seed)
+        else:
+            files, empty_dirs, tree = dict(tree), [], "<literal>"
+        # posix source: stat signatures (size, mtime) are live, so the
+        # stale mutation below is visible to the catalog's freshness
+        # check.  memory destination: replica bytes are reachable for
+        # the corrupt mutation.
+        src_root = os.path.join(run_dir, "srcfs")
+        for name, payload in files.items():
+            p = os.path.join(src_root, name)
+            os.makedirs(os.path.dirname(p), exist_ok=True)
+            with open(p, "wb") as f:
+                f.write(payload)
+        for d in empty_dirs:
+            os.makedirs(os.path.join(src_root, d), exist_ok=True)
+        src_conn = _MeteredSrc(PosixConnector(src_root))
+        dst_inner = MemoryConnector()
+        dst_conn = _InstrumentedDst(dst_inner)
+
+        creds = CredentialStore()
+        for ep_id, conn in (("src-ep", src_conn), ("dst-ep", dst_conn)):
+            creds.register(ep_id, Credential(
+                conn.credential_scheme or "local-user", {"token": "t"}))
+        catalog = ReplicaCatalog(byte_budget=byte_budget)
+        manager = TransferManager(
+            max_workers=max_workers, per_endpoint_cap=None,
+            credential_store=creds, catalog=catalog,
+            marker_root=os.path.join(run_dir, "markers"), clock=self.clock)
+        options = options or TransferOptions(
+            integrity=True, startup_cost=0.0, retry_backoff=0.01,
+            concurrency=2)
+
+        def submit(k: int):
+            return manager.submit(
+                Endpoint(src_conn, SRC_ROOT, "src-ep"),
+                Endpoint(dst_conn, f"{DST_ROOT}/t{k}", "dst-ep"),
+                options, task_id=f"fanout-{self._n:03d}-t{k}")
+
+        def read_dst(k: int) -> dict[str, bytes]:
+            pfx = f"{DST_ROOT}/t{k}/"
+            return {key[len(pfx):]: dst_inner.store.get(key)
+                    for key in dst_inner.store.keys()
+                    if key.startswith(pfx)}
+
+        expected = {name[len(SRC_ROOT) + 1:]: payload
+                    for name, payload in files.items()}
+        results: list[ScenarioResult] = []
+        violations: list[str] = []
+
+        # --- the one real transfer, checked BEFORE any chaos mutates
+        # the source or its landed bytes
+        tasks = [submit(0)]
+        finished0 = tasks[0].wait(timeout=timeout)
+        dest0 = read_dst(0) if finished0 else {}
+        markers0 = manager.service.markers.load(tasks[0].task_id) \
+            if finished0 else {"files": {"unfinished": True}}
+        v0 = check_invariants(tasks[0], expected, dest0, None, markers0,
+                              finished0, options.integrity)
+        results.append(ScenarioResult(
+            task=tasks[0], schedule=None, expected=expected, dest=dest0,
+            violations=v0, route="posix->memory", tree=tree))
+        violations.extend(f"task 0: {x}" for x in v0)
+
+        # zero-byte files are never cataloged (no content to replicate)
+        n_cat = sum(1 for payload in files.values() if payload)
+
+        # --- chaos injection between first transfer and fan-out
+        if chaos == "evict":
+            for e in catalog.entries():
+                catalog.invalidate(e, reason="evicted")
+            if catalog.entries():
+                violations.append("evict chaos left catalog entries behind")
+        elif chaos == "stale":
+            for name, payload in list(files.items()):
+                p = os.path.join(src_root, name)
+                mutated = bytes(b ^ 0xFF for b in payload)
+                with open(p, "wb") as f:
+                    f.write(mutated)
+                st = os.stat(p)
+                os.utime(p, (st.st_atime + 100, st.st_mtime + 100))
+                files[name] = mutated
+            # the fan-out must land the NEW bytes, never the cataloged old
+            expected = {name[len(SRC_ROOT) + 1:]: payload
+                        for name, payload in files.items()}
+        elif chaos == "corrupt":
+            pfx = f"{DST_ROOT}/t0/"
+            for key in list(dst_inner.store.keys()):
+                if key.startswith(pfx):
+                    data = dst_inner.store.get(key)
+                    if data:
+                        dst_inner.store.put(
+                            key, bytes([data[0] ^ 0xFF]) + data[1:])
+
+        # --- the fan-out
+        for k in range(1, n_fanout):
+            tasks.append(submit(k))
+        finished = manager.wait_all(timeout=timeout)
+        for k, task in enumerate(tasks[1:], start=1):
+            dest = read_dst(k) if finished else {}
+            markers_after = manager.service.markers.load(task.task_id) \
+                if finished else {"files": {"unfinished": True}}
+            task_done = finished and task._done.is_set()
+            v = check_invariants(task, expected, dest, None, markers_after,
+                                 task_done, options.integrity)
+            results.append(ScenarioResult(
+                task=task, schedule=None, expected=expected, dest=dest,
+                violations=v, route="posix->memory", tree=tree))
+            violations.extend(f"task {k}: {x}" for x in v)
+
+        source_bytes = src_conn.sent(SRC_ROOT)
+        tree_bytes = sum(len(payload) for payload in files.values())
+        fan = tasks[1:]
+        hits = sum(t.stats.replica_hits for t in fan)
+        fallbacks = sum(t.stats.replica_fallbacks for t in fan)
+        if finished:
+            if chaos == "none":
+                if source_bytes > int(1.05 * tree_bytes):
+                    violations.append(
+                        f"fan-out of {n_fanout} moved {source_bytes} source "
+                        f"bytes for a {tree_bytes} byte tree — dedupe must "
+                        f"collapse N submissions to ~1 real transfer")
+                want = (n_fanout - 1) * n_cat
+                if hits != want:
+                    violations.append(f"expected {want} replica hits "
+                                      f"across the fan-out, saw {hits}")
+                for k, task in enumerate(tasks):
+                    written = dst_conn.written(f"{DST_ROOT}/t{k}/")
+                    if written != task.stats.bytes_total:
+                        violations.append(
+                            f"task {k}: {written} bytes written for a "
+                            f"{task.stats.bytes_total} byte tree — a "
+                            f"replica read must write each byte once")
+            elif chaos == "evict" and source_bytes < 2 * tree_bytes:
+                violations.append(
+                    f"catalog was emptied but the source streamed only "
+                    f"{source_bytes} of >= {2 * tree_bytes} bytes — "
+                    f"evicted entries must fall back to real transfers")
+            elif chaos == "stale":
+                if catalog.stale_invalidations < n_cat:
+                    violations.append(
+                        f"only {catalog.stale_invalidations} of {n_cat} "
+                        f"stale entries were invalidated")
+                if source_bytes < 2 * tree_bytes:
+                    violations.append(
+                        f"source streamed {source_bytes} < "
+                        f"{2 * tree_bytes} bytes after mutation — stale "
+                        f"replicas must never be served")
+            elif chaos == "corrupt":
+                if catalog.corrupt_invalidations < n_cat:
+                    violations.append(
+                        f"only {catalog.corrupt_invalidations} of {n_cat} "
+                        f"corrupted entries were invalidated")
+                if fallbacks < n_cat:
+                    violations.append(
+                        f"only {fallbacks} replica fallbacks for {n_cat} "
+                        f"corrupted replicas — the fold must catch every "
+                        f"corrupt read and fall back")
+        manager.shutdown(wait=False)
+        result = FanoutScenarioResult(
+            chaos=chaos, results=results, manager=manager, catalog=catalog,
+            source_bytes=source_bytes, tree_bytes=tree_bytes,
+            replica_hits=hits, replica_fallbacks=fallbacks,
+            violations=violations)
+        if strict and violations:
+            raise AssertionError(
+                f"fan-out scenario (chaos={chaos}) violated invariants:"
+                "\n  " + "\n  ".join(violations))
+        return result
+
     # ---- degraded-mode scenarios (health plane) --------------------------
     def run_degraded(self, mode: str = "brownout",
                      n_tasks: int | None = None,
@@ -1399,6 +1663,38 @@ class FederatedScenarioResult:
     #: (task_id, new_site_id) for every task the site failure re-homed
     moved: list = field(default_factory=list)
     violations: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    @property
+    def tasks(self):
+        return [r.task for r in self.results]
+
+
+@dataclass
+class FanoutScenarioResult:
+    """Outcome of :meth:`ScenarioRunner.run_fanout`."""
+
+    chaos: str
+    results: list[ScenarioResult]
+    manager: TransferManager
+    catalog: ReplicaCatalog
+    #: bytes that actually left the source (send-side meter) vs the
+    #: tree's size — the fan-out dedupe ratio
+    source_bytes: int = 0
+    tree_bytes: int = 0
+    replica_hits: int = 0
+    replica_fallbacks: int = 0
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def moved_ratio(self) -> float:
+        """source bytes moved per tree byte: ~1.0 means the fan-out
+        collapsed to one real transfer."""
+        return self.source_bytes / self.tree_bytes if self.tree_bytes \
+            else 0.0
 
     @property
     def ok(self) -> bool:

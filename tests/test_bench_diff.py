@@ -1,0 +1,108 @@
+"""The bench-regression gate (benchmarks.diff): identical results pass,
+an injected 20% goodput regression fails with a nonzero exit, and a
+vanished guarded metric fails too.  Runs unmarked in tier-1 — the gate
+itself must never regress silently."""
+
+import copy
+import json
+import os
+
+from benchmarks.diff import GUARDS, compare, format_table, load_suites, main
+
+#: synthetic results covering every guarded metric, shaped exactly like
+#: the BENCH_<suite>.json files benchmarks.run writes
+BASE = {
+    "federation": {
+        "fanout": {"moved_ratio": 1.0, "hit_rate": 0.75,
+                   "bytes_not_moved_frac": 0.75},
+        "goodput": {"2": {"goodput_mb_s": 100.0}},
+    },
+    "perfile": {
+        "s3/conn-local/up": {"rho": 0.99, "t0_speedup": 10.0},
+    },
+}
+
+
+def test_guards_all_covered_by_fixture():
+    # the fixture must exercise every guard, or the tests below prove
+    # nothing about new guards
+    rows = compare(BASE, copy.deepcopy(BASE))
+    assert len(rows) == len(GUARDS)
+    assert all(r["status"] == "ok" for r in rows), rows
+
+
+def test_identical_results_pass():
+    rows = compare(BASE, copy.deepcopy(BASE))
+    assert not [r for r in rows if r["status"] in ("regressed", "missing")]
+    assert "ok" in format_table(rows)
+
+
+def test_injected_goodput_regression_fails():
+    cur = copy.deepcopy(BASE)
+    cur["federation"]["goodput"]["2"]["goodput_mb_s"] = 80.0  # -20%
+    bad = [r for r in compare(BASE, cur) if r["status"] == "regressed"]
+    assert [r["metric"] for r in bad] == ["goodput.2.goodput_mb_s"]
+    assert "regressed" in format_table(compare(BASE, cur))
+
+
+def test_within_tolerance_wiggle_passes():
+    cur = copy.deepcopy(BASE)
+    cur["federation"]["goodput"]["2"]["goodput_mb_s"] = 90.0  # -10% < 15%
+    cur["perfile"]["s3/conn-local/up"]["rho"] = 0.97
+    assert not [r for r in compare(BASE, cur)
+                if r["status"] in ("regressed", "missing")]
+
+
+def test_vanished_metric_fails_and_new_metric_skips():
+    cur = copy.deepcopy(BASE)
+    del cur["federation"]["fanout"]["hit_rate"]
+    rows = compare(BASE, cur)
+    assert [r["metric"] for r in rows if r["status"] == "missing"] \
+        == ["fanout.hit_rate"]
+    # no baseline yet: reported as "new", never a failure
+    baseline = copy.deepcopy(BASE)
+    del baseline["perfile"]
+    rows = compare(baseline, copy.deepcopy(BASE))
+    assert [r["suite"] for r in rows if r["status"] == "new"] \
+        == ["perfile", "perfile"]
+    assert not [r for r in rows if r["status"] in ("regressed", "missing")]
+
+
+def _write_dirs(tmp_path, baselines, currents):
+    base_dir = os.path.join(str(tmp_path), "base")
+    cur_dir = os.path.join(str(tmp_path), "cur")
+    for d, payload in ((base_dir, baselines), (cur_dir, currents)):
+        os.makedirs(d, exist_ok=True)
+        for suite, data in payload.items():
+            with open(os.path.join(d, f"BENCH_{suite}.json"), "w") as f:
+                json.dump(data, f)
+    return base_dir, cur_dir
+
+
+def test_cli_exit_codes(tmp_path, monkeypatch, capsys):
+    regressed = copy.deepcopy(BASE)
+    regressed["federation"]["goodput"]["2"]["goodput_mb_s"] = 80.0
+    base_dir, cur_dir = _write_dirs(tmp_path, BASE, regressed)
+
+    monkeypatch.setattr("sys.argv", ["diff", "--baseline-dir", base_dir,
+                                     "--current-dir", base_dir])
+    assert main() == 0
+    monkeypatch.setattr("sys.argv", ["diff", "--baseline-dir", base_dir,
+                                     "--current-dir", cur_dir])
+    assert main() == 1
+    out = capsys.readouterr()
+    assert "regressed" in out.out
+    # no baselines at all is a usage error, not a silent pass
+    monkeypatch.setattr("sys.argv", ["diff", "--baseline-dir", cur_dir
+                                     + "-nope", "--current-dir", cur_dir])
+    assert main() == 2
+
+
+def test_committed_baselines_satisfy_guard_paths():
+    """Every guard path must resolve in the committed BENCH_*.json —
+    otherwise the CI gate silently skips it as 'new' forever."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    suites = sorted({g.suite for g in GUARDS})
+    baselines = load_suites(repo, suites)
+    rows = compare(baselines, baselines)
+    assert all(r["status"] == "ok" for r in rows), rows

@@ -1,0 +1,265 @@
+"""Replica catalog: content-addressed dedupe across the three planes.
+
+Unit level: exact LRU eviction under a byte budget, staleness
+invalidation on signature mismatch, hint travel through TransferSpec.
+Full stack: fan-out of N identical submissions collapses to one real
+transfer plus N-1 verified replica reads; a mutated source forces a
+real transfer; a corrupted replica fails the §7 fold and falls back.
+
+The suite is marked ``catalog`` (its own tier-1 CI step); the
+chaos-grade fan-out scenario additionally carries ``chaos`` so the
+chaos lane picks it up.
+"""
+
+import os
+import random
+
+import pytest
+
+from repro.catalog import ReplicaCatalog, hint_bytes, source_key
+from repro.core import (Advisor, Credential, CredentialStore, Endpoint,
+                        PerfModel, Route, TransferManager, TransferOptions)
+from repro.fed import TransferSpec
+from repro.sim import ScenarioRunner
+from repro.sim.scenarios import _MeteredSrc
+from repro.connectors import MemoryConnector, PosixConnector
+
+KB = 1024
+MB = 1024 * 1024
+
+pytestmark = pytest.mark.catalog
+
+#: integrity on (the catalog only trusts §7-folded content keys);
+#: coalescing off so every file exercises the per-file replica path
+OPTS = TransferOptions(integrity=True, startup_cost=0.0,
+                       retry_backoff=0.01, coalesce_threshold=0)
+
+
+def tree(n=3, seed=7):
+    rng = random.Random(seed)
+    return {f"data/f{i}.bin" if i % 2 else f"data/sub/f{i}.bin":
+            rng.randbytes(rng.randint(2 * KB, 6 * KB)) for i in range(n)}
+
+
+def make_fabric(tmp_path, files, catalog, max_workers=2):
+    """posix source (live stat signatures) behind a send-side byte
+    meter, memory destination, one manager sharing ``catalog``."""
+    src_root = os.path.join(str(tmp_path), "srcfs")
+    for name, payload in files.items():
+        p = os.path.join(src_root, name)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+    src = _MeteredSrc(PosixConnector(src_root))
+    dst = MemoryConnector()
+    creds = CredentialStore()
+    for ep in ("src-ep", "dst-ep"):
+        creds.register(ep, Credential("local-user", {"token": "t"}))
+    manager = TransferManager(
+        max_workers=max_workers, per_endpoint_cap=None,
+        credential_store=creds, catalog=catalog,
+        marker_root=os.path.join(str(tmp_path), "markers"))
+    return manager, src, dst, src_root
+
+
+def xfer(manager, src, dst, k):
+    task = manager.submit(Endpoint(src, "data", "src-ep"),
+                          Endpoint(dst, f"out/t{k}", "dst-ep"),
+                          OPTS, task_id=f"cat-t{k}")
+    assert task.wait(120)
+    assert task.status == task.SUCCEEDED, task.events[-3:]
+    return task
+
+
+def landed(dst, k):
+    pfx = f"out/t{k}/"
+    return {key[len(pfx):]: dst.store.get(key)
+            for key in dst.store.keys() if key.startswith(pfx)}
+
+
+# --------------------------------------------------------------------------
+# unit: eviction, staleness, hints
+# --------------------------------------------------------------------------
+def _publish(cat, name, size, sig=(100, 1.0)):
+    return cat.publish(content=f"c-{name}", size=size, src_sig=list(sig),
+                       src_endpoint="src-ep", src_path=f"data/{name}",
+                       endpoint_id="dst-ep", path=f"out/{name}")
+
+
+def test_lru_eviction_is_exact():
+    cat = ReplicaCatalog(byte_budget=100)
+    _publish(cat, "a", 40)
+    _publish(cat, "b", 40)
+    # a serving lookup refreshes recency: a becomes MRU, b is now LRU
+    assert cat.lookup("src-ep", "data/a", [100, 1.0], "dst-ep") is not None
+    _publish(cat, "c", 40)  # 120 > 100: exactly one eviction, and it is b
+    assert cat.evictions == 1
+    assert [e.src_path for e in cat.entries()] == ["data/a", "data/c"]
+    assert cat.bytes == 80
+    assert cat.lookup("src-ep", "data/b", [100, 1.0], "dst-ep") is None
+
+
+def test_oversized_publish_is_refused_not_thrashed():
+    cat = ReplicaCatalog(byte_budget=100)
+    _publish(cat, "a", 90)
+    assert _publish(cat, "big", 200) is None
+    # the resident entry survived: refusing beats evicting everything
+    assert [e.src_path for e in cat.entries()] == ["data/a"]
+    assert cat.evictions == 0
+
+
+def test_stale_signature_invalidates_on_lookup():
+    cat = ReplicaCatalog()
+    _publish(cat, "a", 50, sig=(50, 1.0))
+    assert cat.lookup("src-ep", "data/a", [50, 2.0], "dst-ep") is None
+    assert cat.stale_invalidations == 1
+    assert cat.entries() == []
+    # and the stale entry is gone even for a matching-sig retry
+    assert cat.peek("src-ep", "data/a", [50, 1.0], "dst-ep") is None
+
+
+def test_hint_bytes_matches_exact_and_prefix():
+    sources = {source_key("src-ep", "data/a.bin"): 100,
+               source_key("src-ep", "data/sub/b.bin"): 50,
+               source_key("src-ep", "database"): 999,
+               source_key("other-ep", "data/a.bin"): 7}
+    assert hint_bytes(sources, "src-ep", "data") == 150
+    assert hint_bytes(sources, "src-ep", "data/a.bin") == 100
+    assert hint_bytes(sources, "src-ep", "nope") == 0
+
+
+def test_replica_hints_travel_with_spec():
+    cat = ReplicaCatalog(site="s0")
+    _publish(cat, "a", 100)
+    spec = TransferSpec.new("t1", "src-ep", "data", "dst-ep", "out2")
+    spec.replicas = cat.export_hints("src-ep", "data")
+    traveled = TransferSpec.from_json(spec.to_json())
+    adopted = ReplicaCatalog(site="s1")
+    for hint in traveled.replicas:
+        assert adopted.merge_hint(hint) is not None
+    assert adopted.peek("src-ep", "data/a", [100, 1.0],
+                        "dst-ep") is not None
+    # a mutated source must never be served from a traveled hint
+    assert adopted.lookup("src-ep", "data/a", [100, 2.0], "dst-ep") is None
+    # malformed hints are ignored, never raised
+    assert adopted.merge_hint({"garbage": True}) is None
+
+
+def test_advisor_discounts_replica_bytes():
+    model = PerfModel(route="r", t0=0.01, alpha=10.0,
+                      bytes_total=100 * MB, s0=1.0)
+    adv = Advisor([Route("r", model)])
+    _, _, t_full = adv.best(10, 100 * MB)
+    _, _, t_half = adv.best(10, 100 * MB, replica_bytes=50 * MB)
+    _, _, t_all = adv.best(10, 100 * MB, replica_bytes=500 * MB)
+    assert t_half < t_full
+    assert t_all <= t_half
+    # Eq. 4's N*t0 + S0 terms survive: a full replica hit still pays
+    # per-file and startup overhead
+    assert t_all >= model.s0
+
+
+# --------------------------------------------------------------------------
+# full stack: the data plane against the catalog
+# --------------------------------------------------------------------------
+def test_fanout_collapses_to_one_transfer(tmp_path):
+    files = tree()
+    cat = ReplicaCatalog()
+    manager, src, dst, _ = make_fabric(tmp_path, files, cat)
+    try:
+        xfer(manager, src, dst, 0)
+        sent_once = src.sent("data")
+        assert sent_once == sum(len(p) for p in files.values())
+        t1 = xfer(manager, src, dst, 1)
+        t2 = xfer(manager, src, dst, 2)
+        # not one more byte left the source; the fan-out was replica reads
+        assert src.sent("data") == sent_once
+        assert t1.stats.replica_hits == len(files)
+        assert t2.stats.replica_hits == len(files)
+        assert t1.stats.replica_bytes == sent_once
+        expected = {name[len("data/"):]: p for name, p in files.items()}
+        for k in (0, 1, 2):
+            assert landed(dst, k) == expected
+    finally:
+        manager.shutdown(wait=False)
+
+
+def test_mutated_source_forces_real_transfer(tmp_path):
+    files = tree()
+    cat = ReplicaCatalog()
+    manager, src, dst, src_root = make_fabric(tmp_path, files, cat)
+    try:
+        xfer(manager, src, dst, 0)
+        victim = sorted(files)[0]
+        mutated = bytes(b ^ 0xFF for b in files[victim])
+        p = os.path.join(src_root, victim)
+        with open(p, "wb") as f:
+            f.write(mutated)
+        st = os.stat(p)
+        os.utime(p, (st.st_atime + 100, st.st_mtime + 100))
+        files[victim] = mutated
+
+        t1 = xfer(manager, src, dst, 1)
+        # the mutated file was re-read for real, the others hit
+        assert cat.stale_invalidations >= 1
+        assert t1.stats.replica_hits == len(files) - 1
+        expected = {name[len("data/"):]: p for name, p in files.items()}
+        assert landed(dst, 1) == expected
+    finally:
+        manager.shutdown(wait=False)
+
+
+def test_corrupt_replica_fails_fold_and_falls_back(tmp_path):
+    files = tree()
+    cat = ReplicaCatalog()
+    manager, src, dst, _ = make_fabric(tmp_path, files, cat)
+    try:
+        xfer(manager, src, dst, 0)
+        for key in list(dst.store.keys()):
+            if key.startswith("out/t0/"):
+                data = dst.store.get(key)
+                dst.store.put(key, bytes([data[0] ^ 0xFF]) + data[1:])
+
+        t1 = xfer(manager, src, dst, 1)
+        # every corrupted replica read failed its fold, was invalidated,
+        # and fell back to a real source read — correct bytes landed
+        assert t1.stats.replica_fallbacks == len(files)
+        assert cat.corrupt_invalidations == len(files)
+        expected = {name[len("data/"):]: p for name, p in files.items()}
+        assert landed(dst, 1) == expected
+        assert src.sent("data") == 2 * sum(len(p) for p in files.values())
+    finally:
+        manager.shutdown(wait=False)
+
+
+def test_manager_digest_carries_catalog_summary(tmp_path):
+    files = tree()
+    cat = ReplicaCatalog()
+    manager, src, dst, _ = make_fabric(tmp_path, files, cat)
+    try:
+        d = manager.digest()
+        assert d["catalog"]["stats"]["entries"] == 0
+        xfer(manager, src, dst, 0)
+        d = manager.digest()
+        assert d["catalog"]["stats"]["entries"] == len(files)
+        held = hint_bytes(d["catalog"]["sources"], "src-ep", "data")
+        assert held == sum(len(p) for p in files.values())
+    finally:
+        manager.shutdown(wait=False)
+
+
+# --------------------------------------------------------------------------
+# chaos: the fan-out scenario under catalog betrayals
+# --------------------------------------------------------------------------
+@pytest.mark.chaos
+@pytest.mark.parametrize("chaos", ["none", "evict", "stale", "corrupt"])
+def test_run_fanout_chaos(tmp_path, chaos):
+    res = ScenarioRunner(str(tmp_path)).run_fanout(
+        n_fanout=4, chaos=chaos, strict=True)
+    assert res.ok
+    if chaos == "none":
+        assert res.moved_ratio <= 1.05
+        assert res.catalog.hit_rate() >= 0.7
+    else:
+        # betrayed catalog: more source bytes moved, never wrong bytes
+        assert res.source_bytes >= 2 * res.tree_bytes

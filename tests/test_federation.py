@@ -297,6 +297,12 @@ def test_handoff_race_site_dies_mid_batch(tmp_path):
     task_a = coord.submit(spec.to_json())
     assert coord.site_of("race-1") == "a"
     assert src_conn.engaged.wait(30)
+    # the crossing block is still in flight on the receive side; killing
+    # the site before it lands durable would checkpoint zero progress
+    # (same sequencing as ScenarioRunner.run_federated)
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline and task_a.stats.bytes_done == 0:
+        time.sleep(0.002)
 
     moved: list = []
     failer = threading.Thread(
