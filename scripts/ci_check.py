@@ -11,6 +11,8 @@ pushing:
 Lanes:
   hygiene    fail on tracked bytecode artifacts (__pycache__ / *.pyc)
   compile    byte-compile src/benchmarks/examples/scripts/tests
+  lint       PYTHONPATH=src python -m repro.lint --check
+             (contract rules R001-R005 + the suppression budget)
   fed        PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
   svc        PYTHONPATH=src pytest -q -m "svc and not chaos and not slow"
   catalog    PYTHONPATH=src pytest -q
@@ -65,6 +67,9 @@ LANES: dict[str, list[str]] = {
     "hygiene": [sys.executable, "-c", _HYGIENE_SNIPPET],
     "compile": [sys.executable, "-m", "compileall", "-q",
                 "src", "benchmarks", "examples", "scripts", "tests"],
+    # contract linter before any test lane: a clock/charge/lock/health
+    # violation fails fast with a file:line, not a flaky test later
+    "lint": [sys.executable, "-m", "repro.lint", "--check"],
     # the federation suite runs as its own tier-1 step (mirrors CI);
     # its chaos-grade scenario carries both marks and lands in "chaos"
     "fed": [sys.executable, "-m", "pytest", "-q",

@@ -99,7 +99,9 @@ class CloudStorage:
                  fault_plan=None, faults: FaultSchedule | None = None):
         self.profile = profile
         self.clock = clock or DEFAULT_CLOCK
-        self.blobs = BlobDict()
+        # model-clock mtimes: the (size, mtime) stat signature stays
+        # deterministic across same-seed runs (see BlobDict._stamp)
+        self.blobs = BlobDict(clock=self.clock)
         self.quota = TokenBucket(profile.quota_rate, profile.quota_burst, self.clock)
         #: shared fault-injection plan, replayed at API admission with
         #: op names "put"/"put_part"/"get"/"stat"/"list"/"delete"/

@@ -4,19 +4,43 @@ blob backend for emulated cloud stores."""
 from __future__ import annotations
 
 import threading
-import time
 
+from ..core.clock import Clock
 from ..core.connector import AppChannel, Connector, Session, StatInfo
 from ..core.errors import NotFound, PermanentError
 
 
 class BlobDict:
-    """Flat object namespace with '/'-separated pseudo-directories."""
+    """Flat object namespace with '/'-separated pseudo-directories.
 
-    def __init__(self):
+    Mtimes are **model-deterministic** (contract R001): stamped from
+    the injected model :class:`Clock` when one is given, blended with a
+    strictly-increasing per-store tick so two writes in the same model
+    instant (zero-latency stores at time scale 0) still get distinct,
+    ordered stamps.  Same-seed runs therefore produce identical
+    ``(size, mtime)`` stat signatures — which is what keeps the replica
+    catalog's staleness check (and the marker journal's ``src_sig``
+    guard) reproducible instead of poisoned by wall time.
+    """
+
+    #: mtime granularity of the per-write tick (~1 microsecond of model
+    #: time; fine enough to never mask a clock advance, coarse enough
+    #: to survive float addition exactly over millions of writes)
+    TICK = 2.0 ** -20
+
+    def __init__(self, clock: Clock | None = None):
         self._objs: dict[str, bytearray] = {}
         self._mtime: dict[str, float] = {}
+        self._clock = clock
+        self._last_stamp = 0.0
         self.lock = threading.RLock()
+
+    def _stamp(self) -> float:
+        """Next mtime (caller holds the lock): model clock if injected
+        (monotonic per-store counter fallback), strictly increasing."""
+        base = 0.0 if self._clock is None else self._clock.virtual_elapsed
+        self._last_stamp = max(base, self._last_stamp + self.TICK)
+        return self._last_stamp
 
     def put_range(self, key: str, offset: int, data: bytes) -> None:
         with self.lock:
@@ -24,7 +48,7 @@ class BlobDict:
             if len(buf) < offset + len(data):
                 buf.extend(b"\0" * (offset + len(data) - len(buf)))
             buf[offset : offset + len(data)] = data
-            self._mtime[key] = time.time()
+            self._mtime[key] = self._stamp()
 
     def get_range(self, key: str, offset: int, length: int) -> bytes:
         with self.lock:
@@ -35,7 +59,7 @@ class BlobDict:
     def put(self, key: str, data: bytes) -> None:
         with self.lock:
             self._objs[key] = bytearray(data)
-            self._mtime[key] = time.time()
+            self._mtime[key] = self._stamp()
 
     def get(self, key: str) -> bytes:
         with self.lock:
@@ -96,8 +120,9 @@ class BlobDict:
 class MemoryConnector(Connector):
     name = "memory"
 
-    def __init__(self, store: BlobDict | None = None):
-        self.store = store or BlobDict()
+    def __init__(self, store: BlobDict | None = None,
+                 clock: Clock | None = None):
+        self.store = store or BlobDict(clock=clock)
 
     @staticmethod
     def _key(path: str) -> str:

@@ -32,6 +32,32 @@ def _env_scale() -> float:
 
 
 # --------------------------------------------------------------------------
+# sanctioned wall-clock escape hatch
+# --------------------------------------------------------------------------
+# Model time only advances while charged work runs, so a *model*
+# deadline can never fire against a wedged real thread — harnesses and
+# cv-slicing loops that bound REAL threads (scenario kill windows, the
+# coordinator's caller-facing wait_all timeout) genuinely need the wall
+# clock.  They get it from these two helpers and nowhere else: the
+# contract linter (rule R001, ``python -m repro.lint``) bans direct
+# ``time.time/monotonic/sleep`` outside this module, so every wall
+# read in the stack is greppable as wall_now/wall_sleep and auditable
+# here.  Neither helper charges model time; code that does model-visible
+# waiting must go through ``Clock.sleep`` under a bound charge owner.
+
+
+def wall_now() -> float:
+    """Monotonic *wall* seconds — for bounding real threads that may
+    wedge, never for stamping model-visible state."""
+    return time.monotonic()
+
+
+def wall_sleep(seconds: float) -> None:
+    """Real sleep — for harness polls between wall_now() checks."""
+    time.sleep(seconds)
+
+
+# --------------------------------------------------------------------------
 # charge attribution
 # --------------------------------------------------------------------------
 #: thread-local charge owner, shared by every Clock instance so one task

@@ -589,7 +589,7 @@ class TransferManager:
                 if sub is None:
                     return
                 self._activate_locked(sub)
-                threading.Thread(target=self._run_one, args=(sub,),
+                threading.Thread(target=self._run_one, args=(sub,),  # lint: disable=R002(the worker IS the charge boundary — _run establishes charge_to with the task id itself)
                                  daemon=True).start()
 
     @contextmanager

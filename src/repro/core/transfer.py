@@ -79,7 +79,7 @@ def _blame_endpoint(err: Exception, endpoint_id: str) -> None:
     if not getattr(err, "endpoint_id", ""):
         try:
             err.endpoint_id = endpoint_id
-        except Exception:
+        except (AttributeError, TypeError):
             pass  # exotic exception types without settable attrs
 
 
@@ -1063,7 +1063,7 @@ class TransferService:
         counters are recomputed from restart markers each run, so a
         resumed task's stats stay consistent instead of double-counting
         the bytes that landed before the pause."""
-        t_start = time.monotonic()
+        t_start = time.monotonic()  # lint: disable=R001(wall_seconds stat is real elapsed time by design — model time lives in model_seconds)
         task._idle.clear()
         task.status = TransferTask.ACTIVE
         with task._lock:
@@ -1084,10 +1084,10 @@ class TransferService:
                     self._execute(task, src, dst, s_src, s_dst, opt)
         except Exception as e:
             task.log(f"FATAL {type(e).__name__}: {e}")
-            task.stats.wall_seconds += time.monotonic() - t_start
+            task.stats.wall_seconds += time.monotonic() - t_start  # lint: disable=R001(wall_seconds stat is real elapsed time by design)
             task._finish(TransferTask.FAILED)
             return
-        task.stats.wall_seconds += time.monotonic() - t_start
+        task.stats.wall_seconds += time.monotonic() - t_start  # lint: disable=R001(wall_seconds stat is real elapsed time by design)
         if task._cancel_req.is_set():
             self.markers.clear(task.task_id)
             task.log("cancelled")
@@ -1242,7 +1242,7 @@ class TransferService:
                     # (and wedge the join) forever
                     if drained or task.interrupted():
                         return
-                    time.sleep(0.002)
+                    time.sleep(0.002)  # lint: disable=R001(ramped-down worker parks on real time — charging the model clock would bill idle workers to the task)
                     continue
                 item = next_item()
                 if item is None:
@@ -1265,7 +1265,7 @@ class TransferService:
         task_target = [opt.concurrency]
         tuner = None
         if opt.auto_tune:
-            tuner = threading.Thread(
+            tuner = threading.Thread(  # lint: disable=R002(the tuner only reads stats and never touches the clock — binding would misattribute nothing, there is nothing to charge)
                 target=self._tune, args=(task, task_target, opt, stop), daemon=True)
             tuner.start()
         # per-task worker threads inherit the run's charge owner
@@ -1302,7 +1302,7 @@ class TransferService:
         best_rate = 0.0
         last_t = 0.0
         last_b = 0
-        last_w = time.monotonic()
+        last_w = time.monotonic()  # lint: disable=R001(tuner gain signal is wall rate under a scaled clock by design — see docstring)
         while not stop.wait(0.002):
             with task._lock:
                 if not task._rate_samples:
@@ -1310,7 +1310,7 @@ class TransferService:
                 t, b = task._rate_samples[-1]
             if t - last_t < self.TUNE_WINDOW:
                 continue
-            now_w = time.monotonic()
+            now_w = time.monotonic()  # lint: disable=R001(tuner gain signal is wall rate under a scaled clock by design — see docstring)
             dt = (now_w - last_w) if self.clock.scale > 0 else (t - last_t)
             rate = (b - last_b) / max(dt, 1e-9)
             last_t, last_b, last_w = t, b, now_w
@@ -1649,7 +1649,7 @@ class TransferService:
                     # scale 0 the model sleep below is free, and a
                     # crowd of denied waiters would otherwise starve
                     # the one thread holding the half-open probe slot.
-                    time.sleep(0)
+                    time.sleep(0)  # lint: disable=R001(zero-second GIL yield — no time passes on any clock, wall or model)
                     backoff = getattr(e, "retry_after", 0.0)
                 elif attempts > opt.max_retries:
                     result.error = f"retries exhausted: {e}"

@@ -21,7 +21,12 @@ to the task, so cross-site stats stay attributed to the originating
 tenant and task, never to the coordinator.  The coordinator's own
 drain/settle polls advance the *model* clock (never ``time.monotonic``)
 under a sibling ``#wait`` identity, so deadlines are wall-clock-free
-and the invariant still reads 0.0 (see :meth:`wait_seconds`).
+and the invariant still reads 0.0 (see :meth:`wait_seconds`).  The one
+deliberate exception is the caller-facing ``wait_all(timeout=)`` bound:
+model time never advances while every site idles, so a model deadline
+could never fire there — that timeout runs on the sanctioned
+:func:`~repro.core.clock.wall_now` helper (which charges nothing, so
+the third-party invariant is untouched).
 
 Health plane (heartbeats + hysteresis rebalancing)
 --------------------------------------------------
@@ -41,11 +46,10 @@ from __future__ import annotations
 
 import itertools
 import threading
-import time
 from dataclasses import dataclass, field
 
 from ..catalog import hint_bytes
-from ..core.clock import charge_to
+from ..core.clock import charge_to, wall_now
 from ..core.connector import Connector
 from ..core.perfmodel import Advisor
 from ..core.transfer import Endpoint, TransferTask
@@ -750,8 +754,14 @@ class FederatedCoordinator:
         the outer loop only re-checks for tasks that migrated to
         another site (handoff / failover) while a site was draining.
         A task stranded on no live site falls back to a bounded wait
-        on its own done event."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        on its own done event.
+
+        ``timeout`` is a *wall* bound by design: it exists to hand
+        control back to a caller even when the fleet is wedged, and
+        model time never advances while every site idles — a model
+        deadline could never fire.  Routed through the sanctioned
+        ``wall_now`` helper (see the module docstring)."""
+        deadline = None if timeout is None else wall_now() + timeout
 
         def _pending_locked():
             return [t for t in self._tasks.values()
@@ -767,7 +777,7 @@ class FederatedCoordinator:
             drained = True
             for site in sites:
                 remaining = None if deadline is None \
-                    else deadline - time.monotonic()
+                    else deadline - wall_now()
                 if remaining is not None and remaining <= 0:
                     return False
                 drained = site.manager.wait_all(remaining) and drained
@@ -780,7 +790,7 @@ class FederatedCoordinator:
                 # stranded off-site (dead site / mid-migration) — wait
                 # on the task itself, bounded so migrations re-check
                 remaining = None if deadline is None \
-                    else deadline - time.monotonic()
+                    else deadline - wall_now()
                 if remaining is not None and remaining <= 0:
                     return False
                 step = 0.1 if remaining is None else min(0.1, remaining)

@@ -92,14 +92,14 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         compiler_options = {"xla_backend_optimization_level": 0}
         if SHAPES[shape_name].kind == "train":
             cfg = dataclasses.replace(cfg, unroll_scans=True)
-    t0 = time.time()
+    t0 = time.time()  # lint: disable=R001(measures real XLA lowering wall time — outside the transfer model entirely)
     cell = build_cell(arch_id, shape_name, mesh, cfg=cfg)
     lowered = lower_cell(cell, mesh)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.time() - t0  # lint: disable=R001(measures real XLA lowering wall time)
+    t0 = time.time()  # lint: disable=R001(measures real XLA compile wall time)
     compiled = (lowered.compile(compiler_options) if compiler_options
                 else lowered.compile())
-    t_compile = time.time() - t0
+    t_compile = time.time() - t0  # lint: disable=R001(measures real XLA compile wall time)
 
     ma = compiled.memory_analysis()
     print(f"[{arch_id} x {shape_name} @ {mesh_name}] memory_analysis: "

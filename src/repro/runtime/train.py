@@ -83,7 +83,7 @@ def run_training(api: ModelApi, opt_cfg: OptimizerConfig,
     batches = (data_iter.prefetching_batches()
                if hasattr(data_iter, "prefetching_batches") else data_iter)
     losses = []
-    t0 = time.time()
+    t0 = time.time()  # lint: disable=R001(tokens/s is a real training-throughput stat — outside the transfer model entirely)
     tokens = 0
     step = start_step
     for step in range(start_step + 1, loop_cfg.total_steps + 1):
@@ -113,7 +113,7 @@ def run_training(api: ModelApi, opt_cfg: OptimizerConfig,
             if replicator is not None and loop_cfg.replicate_every and \
                     step % loop_cfg.replicate_every == 0:
                 replicator(step)
-    dt = max(time.time() - t0, 1e-9)
+    dt = max(time.time() - t0, 1e-9)  # lint: disable=R001(tokens/s is a real training-throughput stat)
     final_loss = losses[-1][1] if losses else float("nan")
     return TrainResult(steps_run=step - start_step, final_loss=final_loss,
                        losses=losses, restored_from=restored_from,

@@ -38,7 +38,7 @@ from ..connectors.faultproxy import FaultProxyConnector
 from ..core import (ConnectorError, Credential, CredentialStore, Endpoint,
                     EndpointHealth, HealthConfig, RouteCandidate,
                     TransferManager, TransferOptions, TransferService)
-from ..core.clock import Clock
+from ..core.clock import Clock, wall_now, wall_sleep
 from ..core.faults import FaultSchedule
 from ..fed import FederatedCoordinator, TransferSpec
 
@@ -472,7 +472,7 @@ class ScenarioRunner:
             return conn, seed, read
 
         if kind == "memory":
-            conn = MemoryConnector()
+            conn = MemoryConnector(clock=self.clock)
 
             def seed(files, empty_dirs):
                 for name, payload in files.items():
@@ -781,7 +781,7 @@ class ScenarioRunner:
         victim_site = f"s{victim % n_sites}"
 
         # one seeded source connector per site; one shared destination
-        src_inners = [MemoryConnector() for _ in range(n_sites)]
+        src_inners = [MemoryConnector(clock=self.clock) for _ in range(n_sites)]
         per_task_files: list[dict[str, bytes]] = []
         specs: list[TransferSpec] = []
         for j in range(n_tasks):
@@ -806,7 +806,7 @@ class ScenarioRunner:
             hold = _HoldSrc(src_conns[victim % n_sites])
             src_conns[victim % n_sites] = hold
             hold.arm_hold([SRC_ROOT + "/"], hold_after)
-        dst_inner = MemoryConnector()
+        dst_inner = MemoryConnector(clock=self.clock)
         dst_conn = _InstrumentedDst(dst_inner)
 
         endpoints = {f"src-s{i}": src_conns[i] for i in range(n_sites)}
@@ -852,18 +852,19 @@ class ScenarioRunner:
                 hold.release()
             else:
                 victim_tasks = [coord.task(tid) for tid in victim_ids]
-                import time as _time
                 # the crossing block _HoldSrc let through is still in
                 # flight on the receive side, and a pause stops the
                 # receiver at block granularity — killing the site
                 # before that block lands durable would checkpoint zero
                 # progress.  Wait for its write (fast: the dst is not
-                # gated) before pulling the plug.
-                t_end = _time.monotonic() + min(60.0, timeout)
-                while _time.monotonic() < t_end:
+                # gated) before pulling the plug.  Harness kill window:
+                # real threads may wedge, so the bound is wall time via
+                # the sanctioned clock helpers.
+                t_end = wall_now() + min(60.0, timeout)
+                while wall_now() < t_end:
                     if any(t.stats.bytes_done > 0 for t in victim_tasks):
                         break
-                    _time.sleep(0.002)
+                    wall_sleep(0.002)
                 fail_err: list[Exception] = []
 
                 def do_fail():
@@ -878,12 +879,12 @@ class ScenarioRunner:
                 # release the held stream only once every victim task has
                 # its pause landed (or finished): the site's checkpoint
                 # is guaranteed to happen while the task was mid-flight
-                t_end = _time.monotonic() + min(60.0, timeout)
-                while _time.monotonic() < t_end:
+                t_end = wall_now() + min(60.0, timeout)
+                while wall_now() < t_end:
                     if all(t._done.is_set() or t._pause_req.is_set()
                            or t.status == t.PAUSED for t in victim_tasks):
                         break
-                    _time.sleep(0.005)
+                    wall_sleep(0.005)
                 hold.release()
                 failer.join(timeout)
                 if failer.is_alive():
@@ -1054,7 +1055,7 @@ class ScenarioRunner:
         for d in empty_dirs:
             os.makedirs(os.path.join(src_root, d), exist_ok=True)
         src_conn = _MeteredSrc(PosixConnector(src_root))
-        dst_inner = MemoryConnector()
+        dst_inner = MemoryConnector(clock=self.clock)
         dst_conn = _InstrumentedDst(dst_inner)
 
         creds = CredentialStore()
@@ -1296,7 +1297,7 @@ class ScenarioRunner:
             patience = 2.0
         schedule.clock = self.clock
 
-        src_inner = MemoryConnector()
+        src_inner = MemoryConnector(clock=self.clock)
         per_task_files: list[dict[str, bytes]] = []
         for i in range(n):
             rng = random.Random(f"degraded|{seed}|{i}")
@@ -1306,7 +1307,7 @@ class ScenarioRunner:
             per_task_files.append(files)
             for name, data in files.items():
                 src_inner.store.put(name, data)
-        dst_inner = MemoryConnector()
+        dst_inner = MemoryConnector(clock=self.clock)
         dst_conn = FaultProxyConnector(dst_inner, schedule)
 
         creds = CredentialStore()
@@ -1448,7 +1449,7 @@ class ScenarioRunner:
         n_sites = 2
         victim_site = f"s{victim % n_sites}"
 
-        src_inners = [MemoryConnector() for _ in range(n_sites)]
+        src_inners = [MemoryConnector(clock=self.clock) for _ in range(n_sites)]
         per_task_files: list[dict[str, bytes]] = []
         specs: list[TransferSpec] = []
         for j in range(n_tasks):
@@ -1468,7 +1469,7 @@ class ScenarioRunner:
         hold = _HoldSrc(src_conns[victim % n_sites])
         src_conns[victim % n_sites] = hold
         hold.arm_hold([SRC_ROOT + "/"], 2048)
-        dst_inner = MemoryConnector()
+        dst_inner = MemoryConnector(clock=self.clock)
         dst_conn = _InstrumentedDst(dst_inner)
 
         endpoints = {f"src-s{i}": src_conns[i] for i in range(n_sites)}
@@ -1510,7 +1511,6 @@ class ScenarioRunner:
             coord.submit(spec.to_json())
 
         violations: list[str] = []
-        import time as _time
         if not hold.engaged.wait(timeout=min(60.0, timeout)):
             violations.append("hold never engaged: the victim site had "
                               "no mid-flight task to strand")
@@ -1540,12 +1540,12 @@ class ScenarioRunner:
         victim_tasks = [coord.task(tid) for tid in victim_ids]
 
         def do_release():
-            t_end = _time.monotonic() + min(60.0, timeout)
-            while _time.monotonic() < t_end:
+            t_end = wall_now() + min(60.0, timeout)
+            while wall_now() < t_end:
                 if all(t._done.is_set() or t._pause_req.is_set()
                        or t.status == t.PAUSED for t in victim_tasks):
                     break
-                _time.sleep(0.005)
+                wall_sleep(0.005)
             hold.release()
 
         releaser = threading.Thread(target=do_release, daemon=True)

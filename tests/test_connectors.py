@@ -213,3 +213,55 @@ def test_native_client_roundtrip(tmp_path):
     client.login()
     client.upload_bytes(b"hello cloud", "k1")
     assert client.download_bytes("k1") == b"hello cloud"
+
+
+# --------------------------------------------------------------------------
+# model-deterministic mtimes (contract R001: no wall clock in storage)
+# --------------------------------------------------------------------------
+
+
+def _signature_run(seed_payloads):
+    """One fresh clocked memory store, the same scripted write sequence:
+    returns the final {key: (size, mtime)} stat signature."""
+    clock = Clock(scale=0.0)
+    connector = MemoryConnector(clock=clock)
+    session = connector.start(None)
+    for key, payload, advance in seed_payloads:
+        clock.sleep(advance)
+        connector.recv(session, key, SourceChannel(payload))
+    return {k: (connector.stat(session, k).size,
+                connector.stat(session, k).mtime)
+            for k, _, _ in seed_payloads}
+
+
+def test_memory_mtimes_model_deterministic():
+    """Same-seed runs must produce byte-identical (size, mtime)
+    signatures — the replica catalog's staleness check and the marker
+    journal's src_sig guard depend on it.  A wall-clock stamp (the old
+    behaviour) makes every run unique."""
+    script = [("a/x.bin", b"x" * 512, 0.25),
+              ("a/y.bin", b"y" * 2048, 1.5),
+              ("b/z.bin", b"z" * 64, 0.0)]
+    assert _signature_run(script) == _signature_run(script)
+
+
+def test_memory_mtime_tracks_model_clock():
+    clock = Clock(scale=0.0)
+    store = MemoryConnector(clock=clock).store
+    store.put("k", b"v1")
+    first = store.mtime("k")
+    clock.sleep(3.0)
+    store.put("k", b"v2")  # same size — only mtime can signal the change
+    assert store.mtime("k") >= 3.0 > first
+
+
+def test_memory_mtime_strictly_increases_within_an_instant():
+    """Two writes in the same model instant (zero-latency store) must
+    still get distinct, ordered stamps, so a same-size rewrite is never
+    invisible to the (size, mtime) staleness check."""
+    for clock in (Clock(scale=0.0), None):  # injected clock and fallback
+        store = MemoryConnector(clock=clock).store
+        store.put("k", b"same-size")
+        first = store.mtime("k")
+        store.put("k", b"same-size")
+        assert store.mtime("k") > first

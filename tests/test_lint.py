@@ -1,0 +1,349 @@
+"""Contract-linter tests: one seeded violation per rule (exact rule id
+and file:line asserted), a clean fixture that must produce no findings,
+the suppression/budget round-trip, and a repo-wide "the tree is clean"
+gate mirroring the CI lane."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.lint.engine import (budget_violations, load_budget, run_lint,
+                               write_budget)
+from repro.lint.rules import RULES
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def lint_tree(tmp_path: Path, files: dict) -> "LintReport":
+    """Write ``files`` (repo-relative path -> source) under a temp root
+    that mirrors the production layout, then lint it — so rule scoping
+    (R001 allowlist, R002 transfer-stack prefixes, ...) applies exactly
+    as it does on the real tree."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src), encoding="utf-8")
+    return run_lint(tmp_path)
+
+
+def hits(report, rule):
+    return [(f.file, f.line) for f in report.findings if f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# seeded violations: exact rule + file:line
+# --------------------------------------------------------------------------
+
+
+def test_r001_wall_clock(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        import time
+
+        def poll():
+            t0 = time.monotonic()
+            return t0
+        """})
+    assert hits(report, "R001") == [("src/repro/core/thing.py", 4)]
+
+
+def test_r001_aliased_and_from_imports(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/fed/thing.py": """\
+        from time import monotonic as mono
+
+        def poll():
+            import time as _t
+            _t.sleep(0.1)
+            return mono()
+        """})
+    assert hits(report, "R001") == [("src/repro/fed/thing.py", 5),
+                                    ("src/repro/fed/thing.py", 6)]
+
+
+def test_r001_datetime_and_unseeded_random(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/svc/thing.py": """\
+        import datetime
+        import random
+
+        def stamp():
+            return datetime.datetime.now(), random.random()
+        """})
+    assert ("src/repro/svc/thing.py", 5) in hits(report, "R001")
+    assert len(hits(report, "R001")) == 2  # both calls, same line
+
+
+def test_r001_clock_py_is_allowlisted(tmp_path):
+    src = """\
+        import time
+
+        def wall_now():
+            return time.monotonic()
+        """
+    clean = lint_tree(tmp_path, {"src/repro/core/clock.py": src})
+    assert hits(clean, "R001") == []
+    # identical source anywhere else is a violation
+    dirty = lint_tree(tmp_path / "b", {"src/repro/core/clock2.py": src})
+    assert hits(dirty, "R001") == [("src/repro/core/clock2.py", 4)]
+
+
+def test_r002_unbound_thread_and_pool(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/connectors/thing.py": """\
+        import threading
+
+        def spawn(fn, pool):
+            threading.Thread(target=fn, daemon=True).start()
+            pool.submit(fn, 1)
+        """})
+    assert hits(report, "R002") == [("src/repro/connectors/thing.py", 4),
+                                    ("src/repro/connectors/thing.py", 5)]
+
+
+def test_r002_bound_callables_pass(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/connectors/thing.py": """\
+        import threading
+        from ..core.clock import bind_charge_owner
+
+        def spawn(fn, pool):
+            threading.Thread(target=bind_charge_owner(fn)).start()
+            run = bind_charge_owner(fn)
+            pool.submit(run, 1)
+        """})
+    assert hits(report, "R002") == []
+
+
+def test_r002_out_of_scope_tree_untouched(tmp_path):
+    # sim/ harness threads are not charge-accounted — rule scoped out
+    report = lint_tree(tmp_path, {"src/repro/sim/thing.py": """\
+        import threading
+
+        def spawn(fn):
+            threading.Thread(target=fn).start()
+        """})
+    assert hits(report, "R002") == []
+
+
+def test_r003_locked_call_without_lock(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        class Q:
+            def _pick_locked(self):
+                return 1
+
+            def pick(self):
+                return self._pick_locked()
+
+            def pick_safely(self):
+                with self._lock:
+                    return self._pick_locked()
+        """})
+    assert hits(report, "R003") == [("src/repro/core/thing.py", 6)]
+
+
+def test_r003_sleep_under_lock(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        class Q:
+            def slow(self, clock, conn, session, path, ch):
+                with self._lock:
+                    clock.sleep(1.0)
+                    conn.recv(session, path, ch)
+        """})
+    assert hits(report, "R003") == [("src/repro/core/thing.py", 4),
+                                    ("src/repro/core/thing.py", 5)]
+
+
+def test_r004_bare_raise_and_blind_swallow(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        def bad():
+            try:
+                raise Exception("boom")
+            except Exception:
+                pass
+        """})
+    assert hits(report, "R004") == [("src/repro/core/thing.py", 3),
+                                    ("src/repro/core/thing.py", 4)]
+
+
+def test_r004_scoped_to_core(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/sim/thing.py": """\
+        def tolerated():
+            try:
+                raise Exception("boom")
+            except Exception:
+                pass
+        """})
+    assert hits(report, "R004") == []
+
+
+def test_r005_blocking_reachable_from_publish(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/svc/thing.py": """\
+        class StatusBus:
+            def publish(self, topic, data=None):
+                self._fan_out(topic)
+
+            def _fan_out(self, topic):
+                self._cv.wait_for(lambda: True)
+        """})
+    assert hits(report, "R005") == [("src/repro/svc/thing.py", 6)]
+
+
+def test_r005_nonblocking_publish_clean(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/svc/thing.py": """\
+        class StatusBus:
+            def publish(self, topic, data=None):
+                with self._lock:
+                    self._ring.append(topic)
+                self._cv.notify_all()
+        """})
+    assert hits(report, "R005") == []
+
+
+# --------------------------------------------------------------------------
+# clean fixture: the idiomatic stack produces no findings
+# --------------------------------------------------------------------------
+
+
+def test_clean_fixture_no_false_positives(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        import threading
+        from .clock import Clock, bind_charge_owner, charge_to
+        from .errors import TransientError
+
+        class Worker:
+            def __init__(self, clock):
+                self.clock = clock
+                self._lock = threading.Lock()
+
+            def _pop_locked(self):
+                return 1
+
+            def run(self, task_id, pool, fn):
+                with charge_to(task_id):
+                    self.clock.sleep(0.5)
+                with self._lock:
+                    item = self._pop_locked()
+                threading.Thread(target=bind_charge_owner(fn)).start()
+                pool.submit(bind_charge_owner(fn), item)
+
+            def fail(self):
+                raise TransientError("routable")
+        """})
+    assert report.findings == [] and report.meta == []
+
+
+# --------------------------------------------------------------------------
+# suppressions + budget
+# --------------------------------------------------------------------------
+
+SUPPRESSED_SRC = """\
+    import time
+
+    def poll():
+        return time.monotonic()  # lint: disable=R001(fixture: sanctioned wall read)
+    """
+
+
+def test_suppression_with_reason_closes_finding(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": SUPPRESSED_SRC})
+    assert report.findings == [] and report.meta == []
+    assert [(f.rule, f.line, f.reason) for f in report.suppressed] == \
+        [("R001", 4, "fixture: sanctioned wall read")]
+
+
+def test_reasonless_suppression_is_r000(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        import time
+
+        def poll():
+            return time.monotonic()  # lint: disable=R001
+        """})
+    # the disable still closes nothing: the R001 stays open AND the
+    # reason-less marker is its own meta finding
+    assert [(f.rule, f.line) for f in report.failing] == \
+        [("R000", 4), ("R001", 4)]
+
+
+def test_budget_round_trip_and_growth_fails(tmp_path):
+    files = {"src/repro/core/thing.py": SUPPRESSED_SRC}
+    report = lint_tree(tmp_path, files)
+    budget_path = tmp_path / "lint-budget.json"
+    write_budget(budget_path, report)
+    budget = load_budget(budget_path)
+    assert budget == {"src/repro/core/thing.py": {"R001": 1}}
+    assert budget_violations(report, budget) == []
+
+    # a second drive-by disable exceeds the blessed count (appended
+    # lines keep the literal's indent so dedent still strips uniformly)
+    grown = dict(files)
+    grown["src/repro/core/thing.py"] += (
+        "\n    def poll2():\n"
+        "        return time.monotonic()"
+        "  # lint: disable=R001(fixture: another one)\n")
+    report2 = lint_tree(tmp_path / "b", grown)
+    assert report2.findings == []  # suppressed line-by-line...
+    over = budget_violations(report2, budget)
+    assert len(over) == 1 and "exceed" in over[0]  # ...but over budget
+
+
+def test_unused_suppression_reported(tmp_path):
+    report = lint_tree(tmp_path, {"src/repro/core/thing.py": """\
+        def fine():
+            return 1  # lint: disable=R001(stale: nothing to suppress)
+        """})
+    assert [(s.rule, s.line) for s in report.unused_suppressions] == \
+        [("R001", 2)]
+
+
+# --------------------------------------------------------------------------
+# the real tree + the CI entry point
+# --------------------------------------------------------------------------
+
+
+def test_repo_tree_is_clean():
+    report = run_lint(REPO_ROOT)
+    assert report.failing == [], \
+        [f.to_dict() for f in report.failing]
+    # every committed suppression carries a reason (R000 covers the
+    # absent case; this asserts the reasons survived the round trip)
+    assert all(f.reason for f in report.suppressed)
+
+
+def test_repo_suppressions_within_budget():
+    report = run_lint(REPO_ROOT)
+    budget = load_budget(REPO_ROOT / "lint-budget.json")
+    assert budget_violations(report, budget) == []
+
+
+def test_cli_check_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--check", "--json"],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["ok"] is True
+    assert payload["findings"] == []
+
+
+def test_cli_reports_seeded_violation(tmp_path):
+    bad = tmp_path / "src" / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n", encoding="utf-8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--check", "--json",
+         "--root", str(tmp_path)],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"),
+             "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert [(f["rule"], f["file"], f["line"])
+            for f in payload["findings"]] == \
+        [("R001", "src/repro/core/bad.py", 2)]
+
+
+def test_rules_registry_complete():
+    assert set(RULES) == {"R001", "R002", "R003", "R004", "R005"}
+    for rule, (title, check) in RULES.items():
+        assert title and callable(check)
