@@ -39,6 +39,7 @@ SUITES: dict[str, tuple[str, str]] = {
     "manager": ("bench_manager", "fleet goodput + fairness + refit"),
     "federation": ("bench_federation", "multi-site goodput + handoff"),
     "svc": ("bench_svc", "service plane: streaming status vs polling"),
+    "obs": ("bench_obs", "observability plane: tracing+metrics overhead"),
     "ckpt": ("bench_ckpt", "framework: §8 coalescing"),
     "data": ("bench_data", "framework: ingest"),
     "kernels": ("bench_kernels", "framework: pallas kernels"),

@@ -12,13 +12,14 @@ Lanes:
   hygiene    fail on tracked bytecode artifacts (__pycache__ / *.pyc)
   compile    byte-compile src/benchmarks/examples/scripts/tests
   lint       PYTHONPATH=src python -m repro.lint --check
-             (contract rules R001-R005 + the suppression budget)
+             (contract rules R001-R006 + the suppression budget)
   fed        PYTHONPATH=src pytest -q -m "fed and not chaos and not slow"
   svc        PYTHONPATH=src pytest -q -m "svc and not chaos and not slow"
   catalog    PYTHONPATH=src pytest -q
              -m "catalog and not chaos and not slow"
+  obs        PYTHONPATH=src pytest -q -m "obs and not chaos and not slow"
   tier1      PYTHONPATH=src pytest -x -q
-             -m "not chaos and not slow and not fed and not svc and not catalog"
+             -m "not chaos and not slow and not fed and not svc and not catalog and not obs"
   degraded   PYTHONPATH=src pytest -q tests/test_degraded_scenarios.py
              -m "chaos or fed"  (health plane: brownout / death / failover)
   chaos      PYTHONPATH=src pytest -q -m "chaos or slow"
@@ -54,7 +55,7 @@ _BENCH_DIFF_SNIPPET = (
     "import subprocess, sys, tempfile\n"
     "with tempfile.TemporaryDirectory() as tmp:\n"
     "    rc = subprocess.run([sys.executable, '-m', 'benchmarks.run',\n"
-    "                         '--quick', '--only', 'perfile,federation',\n"
+    "                         '--quick', '--only', 'perfile,federation,obs',\n"
     "                         '--out', tmp],\n"
     "                        stdout=subprocess.DEVNULL).returncode\n"
     "    if rc:\n"
@@ -83,9 +84,13 @@ LANES: dict[str, list[str]] = {
     # fan-out scenario carries both marks and lands in "chaos"
     "catalog": [sys.executable, "-m", "pytest", "-q",
                 "-m", "catalog and not chaos and not slow"],
+    # observability plane: tracer spans, metrics registry, time-budget
+    # attribution — its own lane so a trace/budget regression is named
+    "obs": [sys.executable, "-m", "pytest", "-q",
+            "-m", "obs and not chaos and not slow"],
     "tier1": [sys.executable, "-m", "pytest", "-x", "-q",
               "-m", "not chaos and not slow and not fed and not svc "
-                    "and not catalog"],
+                    "and not catalog and not obs"],
     # mirrors the CI chaos job's named degraded-mode step (health plane)
     "degraded": [sys.executable, "-m", "pytest", "-q",
                  "tests/test_degraded_scenarios.py",

@@ -71,6 +71,17 @@ def current_charge_owner() -> str | None:
     return getattr(_attribution, "owner", None)
 
 
+def current_trace_context():
+    """The observability span context active on this thread, or ``None``.
+
+    Opaque to the clock: :mod:`repro.obs` installs a context object via
+    :func:`trace_context`, and :meth:`Clock.sleep` calls its ``charge``
+    hook so every model-second lands on the innermost open span.  The
+    clock never imports ``obs`` — the coupling is one duck-typed method.
+    """
+    return getattr(_attribution, "trace", None)
+
+
 @contextmanager
 def charge_to(owner: str | None):
     """Attribute every model-time charge made by this thread (latency,
@@ -84,20 +95,47 @@ def charge_to(owner: str | None):
         _attribution.owner = prev
 
 
+def _swap_trace_context(ctx):
+    """Install ``ctx`` as the thread's span context and return the
+    previous one.  The raw form of :func:`trace_context` for the span
+    enter/exit hot path, where a generator context manager per span is
+    measurable fleet overhead; callers MUST restore the returned
+    previous context themselves."""
+    prev = getattr(_attribution, "trace", None)
+    _attribution.trace = ctx
+    return prev
+
+
+@contextmanager
+def trace_context(ctx):
+    """Make ``ctx`` the thread's active span context for the duration of
+    the block (the tracing sibling of :func:`charge_to`).  Nests: the
+    previous context is restored on exit."""
+    prev = getattr(_attribution, "trace", None)
+    _attribution.trace = ctx
+    try:
+        yield
+    finally:
+        _attribution.trace = prev
+
+
 def bind_charge_owner(fn):
-    """Capture the *calling* thread's charge owner and re-establish it in
-    whichever thread eventually runs ``fn``.  This is how attribution
-    crosses thread boundaries: per-task worker threads, sender threads,
-    connector stream pools, and — critically — session-level batch pools
-    that are shared across tasks (the owner is captured per submitted
-    work item, not per pool thread)."""
+    """Capture the *calling* thread's charge owner — and its active span
+    context — and re-establish both in whichever thread eventually runs
+    ``fn``.  This is how attribution crosses thread boundaries: per-task
+    worker threads, sender threads, connector stream pools, and —
+    critically — session-level batch pools that are shared across tasks
+    (the owner is captured per submitted work item, not per pool
+    thread).  Spans opened on the far side of the boundary therefore
+    attach to the same task timeline as the submitting thread's."""
     owner = current_charge_owner()
-    if owner is None:
+    trace = current_trace_context()
+    if owner is None and trace is None:
         return fn
 
     @functools.wraps(fn)
     def bound(*args, **kwargs):
-        with charge_to(owner):
+        with charge_to(owner), trace_context(trace):
             return fn(*args, **kwargs)
 
     return bound
@@ -133,6 +171,10 @@ class Clock:
             if owner is not None:
                 self._charges[owner] = \
                     self._charges.get(owner, 0.0) + model_seconds
+        trace = getattr(_attribution, "trace", None)
+        if trace is not None:
+            # outside self._lock: the span context takes its own lock
+            trace.charge(model_seconds)
         if self.scale <= 0:
             return
         real = model_seconds * self.scale

@@ -60,6 +60,7 @@ from dataclasses import dataclass, field
 
 from .clock import Clock, DEFAULT_CLOCK
 from .errors import EndpointUnavailable
+from ..obs.trace import NULL_TRACER
 
 #: breaker states
 CLOSED, OPEN, HALF_OPEN = "closed", "open", "half-open"
@@ -93,7 +94,7 @@ class _EpState:
     """Per-endpoint mutable state; guarded by the registry lock."""
 
     __slots__ = ("ep", "state", "ewma", "samples", "opened_at", "probing",
-                 "probe_ok", "tokens", "vlast")
+                 "probe_ok", "tokens", "vlast", "entered_at")
 
     def __init__(self, ep: str, capacity: float):
         self.ep = ep
@@ -105,6 +106,7 @@ class _EpState:
         self.probe_ok = 0      # consecutive successful probes
         self.tokens = capacity
         self.vlast = 0.0
+        self.entered_at = 0.0  # model time the current breaker state began
 
 
 class _Ticket:
@@ -136,9 +138,13 @@ class EndpointHealth:
     (:meth:`Endpoint.resolved_id`)."""
 
     def __init__(self, config: HealthConfig | None = None,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None, tracer=None):
         self.config = config or HealthConfig()
         self.clock = clock or DEFAULT_CLOCK
+        #: observability: breaker state windows are recorded as
+        #: retroactive (charge-free) trace spans; the TransferManager
+        #: swaps in its live tracer when it shares this registry
+        self.tracer = tracer or NULL_TRACER
         #: (model_time, endpoint, old_state, new_state) in commit order
         self.transitions: list[tuple[float, str, str, str]] = []
         #: fast-fails denied per endpoint (observability)
@@ -163,6 +169,11 @@ class EndpointHealth:
 
     def _move(self, s: _EpState, new: str, now: float) -> None:
         self.transitions.append((now, s.ep, s.state, new))
+        # the window just closed (e.g. the whole "open" cooldown) becomes
+        # a retroactive span: visible in trace exports, charges nothing
+        self.tracer.record(f"breaker-{s.state}", "health",
+                           s.entered_at, now, endpoint=s.ep, to=new)
+        s.entered_at = now
         s.state = new
 
     def _deny(self, ep: str, retry_after: float, reason: str,

@@ -54,6 +54,8 @@ from .connector import Session, iter_files
 from .perfmodel import Advisor, Route, fit_perf_model
 from .transfer import (Endpoint, TransferOptions, TransferService,
                        TransferTask)
+from ..obs import MetricsRegistry, Tracer
+from ..obs.trace import NULL_TRACER
 from ..svc import StatusBus
 
 
@@ -202,6 +204,9 @@ class _Submission:
     #: a resume raced an in-flight pause: when the run loop drains with
     #: status PAUSED, re-queue instead of filing into the paused set
     resume_pending: bool = False
+    #: model time this submission (last) entered the ready queue — the
+    #: start of the retroactive "queue-wait" span recorded at dispatch
+    enqueued_at: float = 0.0
     #: seq of this submission's live heap entry, or None when it holds
     #: none (running / paused / cancelled).  A heap item is a tombstone
     #: unless its seq matches — that is what lets pause/cancel dequeue
@@ -277,7 +282,8 @@ class TransferManager:
                  per_endpoint_cap: int | None = 2,
                  share_sessions: bool = True, refit_every: int = 8,
                  history_limit: int = 64, site_id: str = "",
-                 health=None, catalog=None, **service_kw):
+                 health=None, catalog=None, tracer=None, registry=None,
+                 metrics_every: int = 16, **service_kw):
         self.service = service or TransferService(**service_kw)
         if health is not None:
             # shared health plane: the data plane's retry loop and this
@@ -304,6 +310,32 @@ class TransferManager:
         self.sessions = SessionPool(self.service.creds) if share_sessions \
             else None
         self.metrics = ManagerMetrics()
+        #: observability plane (repro.obs): a model-time tracer shared
+        #: with the data plane — spans opened inside TransferService
+        #: attach to the task each run loop binds — plus a labeled
+        #: metrics registry absorbing the per-plane counters
+        if tracer is None and self.service.tracer.enabled:
+            # the caller pre-wired a live tracer on the service: share it
+            self.tracer = self.service.tracer
+        else:
+            self.tracer = tracer or Tracer(clock=self.service.clock)
+            self.service.tracer = self.tracer
+        if self.service.health is not None \
+                and self.service.health.tracer is NULL_TRACER:
+            self.service.health.tracer = self.tracer
+        self.registry = registry or MetricsRegistry()
+        #: publish a "metrics" bus event every N terminal completions
+        #: (0 disables the periodic stream)
+        self.metrics_every = max(0, metrics_every)
+        self._tasks_total = self.registry.counter(
+            "tasks_total", "terminal task outcomes by site/tenant/status")
+        self._task_seconds = self.registry.histogram(
+            "task_model_seconds",
+            "charged model seconds per terminal task")
+        self._queue_wait = self.registry.histogram(
+            "queue_wait_model_seconds",
+            "model seconds from enqueue to dispatch")
+        self.registry.register_collector(self._collect_metrics)
         self._lock = threading.RLock()
         #: service plane: lifecycle/progress event stream (see repro.svc)
         self.bus = StatusBus(site_id=site_id, clock=self.service.clock)
@@ -345,6 +377,46 @@ class TransferManager:
         """The shared :class:`~repro.catalog.ReplicaCatalog` (``None``
         when the replica plane is off)."""
         return self.service.catalog
+
+    # ---- observability plane ---------------------------------------------
+    def _collect_metrics(self) -> dict:
+        """Snapshot-time collector absorbing the legacy per-plane
+        counters (ManagerMetrics, bus, tracer, health, catalog) into
+        the registry namespace without any write-path changes."""
+        m = self.metrics
+        out = {
+            "manager_submitted_total": m.submitted,
+            "manager_completed_total": m.completed,
+            "manager_cancelled_total": m.cancelled,
+            "manager_pauses_total": m.pauses,
+            "manager_resumes_total": m.resumes,
+            "manager_exports_total": m.exports,
+            "manager_imports_total": m.imports,
+            "manager_health_deferrals_total": m.health_deferrals,
+            "manager_peak_active": m.peak_active,
+            "bus_events_published_total": self.bus.published,
+            "tracer_spans_recorded_total": self.tracer.spans_recorded,
+            "tracer_spans_dropped_total": self.tracer.spans_dropped,
+        }
+        health = self.service.health
+        if health is not None:
+            snap = health.snapshot()
+            out["health_endpoints"] = len(snap)
+            out["health_breakers_open"] = sum(
+                1 for s in snap.values() if s["state"] != "closed")
+            out["health_denials_total"] = sum(
+                s["denials"] for s in snap.values())
+        catalog = self.service.catalog
+        if catalog is not None:
+            for k, v in catalog.stats().items():
+                if isinstance(v, (int, float)):
+                    out[f"catalog_{k}"] = v
+        return out
+
+    def scrape(self) -> str:
+        """Prometheus-flavoured text of every fleet metric (native
+        instruments + absorbed per-plane counters)."""
+        return self.registry.scrape()
 
     # ---- service plane: mutation signal + event publication --------------
     def _touch_locked(self, etype: str | None = None,
@@ -398,6 +470,7 @@ class TransferManager:
         task.stats.predicted_seconds = predicted
         task.stats.site = self.site_id
         task.stats.origin_site = self.site_id
+        task.trace_id = f"trace-{task.task_id}"
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("manager is shut down")
@@ -419,6 +492,7 @@ class TransferManager:
         heap = self._queues.setdefault(sub.tenant, [])
         heapq.heappush(heap, (sub.priority, sub.seq, sub))
         sub.queued_seq = sub.seq
+        sub.enqueued_at = self.service.clock.virtual_elapsed
         if sub.tenant not in self._rr:
             self._rr.append(sub.tenant)
         self._queued[sub.task.task_id] = sub
@@ -569,6 +643,14 @@ class TransferManager:
         by_tenant = self.metrics.dispatches_by_tenant
         by_tenant[sub.tenant] = by_tenant.get(sub.tenant, 0) + 1
         self.metrics.dispatch_log.append((sub.tenant, tid))
+        # queue time was waited out, not slept through: a retroactive
+        # span (visible in exports, charges nothing) + a histogram point
+        now = self.service.clock.virtual_elapsed
+        self.tracer.record("queue-wait", "queue", sub.enqueued_at, now,
+                           trace_id=sub.task.trace_id, task_id=tid,
+                           tenant=sub.tenant)
+        self._queue_wait.observe(max(0.0, now - sub.enqueued_at),
+                                 site=self.site_id, tenant=sub.tenant)
         self._touch_locked("dispatched", sub.task, tenant=sub.tenant)
 
     def _pump(self) -> None:
@@ -613,14 +695,23 @@ class TransferManager:
         clock = self.service.clock
         tid = sub.task.task_id
         c0 = clock.charged(tid)
+        t0 = self.tracer.category_seconds(tid)
         scope = self._pooled_sessions if self.sessions is not None else None
         try:
             self.service._run(sub.task, sub.src, sub.dst, sub.options,
                               session_scope=scope)
         finally:
-            self._on_done(sub, clock.charged(tid) - c0)
+            # the span-category delta mirrors the charge delta exactly:
+            # both are fed by the same Clock.sleep calls, so the
+            # time_budget decomposition cannot drift from the total
+            t1 = self.tracer.category_seconds(tid)
+            spans = {cat: secs - t0.get(cat, 0.0)
+                     for cat, secs in t1.items()
+                     if secs - t0.get(cat, 0.0) > 0.0}
+            self._on_done(sub, clock.charged(tid) - c0, spans)
 
-    def _on_done(self, sub: _Submission, model_seconds: float) -> None:
+    def _on_done(self, sub: _Submission, model_seconds: float,
+                 span_seconds: dict | None = None) -> None:
         task = sub.task
         refit_due: str | None = None
         with self._lock:
@@ -633,6 +724,9 @@ class TransferManager:
                 else:
                     self._active_eps.pop(ep_id, None)
             task.stats.actual_model_seconds += model_seconds
+            for cat, secs in (span_seconds or {}).items():
+                ss = task.stats.span_seconds
+                ss[cat] = ss.get(cat, 0.0) + secs
             if task.status == TransferTask.PAUSED:
                 self.metrics.pauses += 1
                 if sub.resume_pending:
@@ -651,10 +745,12 @@ class TransferManager:
             elif task.status == TransferTask.CANCELLED:
                 self.metrics.cancelled += 1
                 self.service.clock.forget(tid)
+                self.tracer.forget(tid)
                 etype = "cancelled"
             else:
                 self.metrics.completed += 1
                 self.service.clock.forget(tid)
+                self.tracer.forget(tid)
                 etype = "done" if task.status == TransferTask.SUCCEEDED \
                     else "failed"
                 if task.status == TransferTask.SUCCEEDED and sub.route_name:
@@ -677,6 +773,22 @@ class TransferManager:
                         else:
                             self._since_refit[route] = n
             self._touch_locked(etype, task, status=task.status)
+        if etype in ("done", "failed", "cancelled"):
+            self._tasks_total.inc(site=self.site_id, tenant=sub.tenant,
+                                  status=task.status)
+            self._task_seconds.observe(task.stats.actual_model_seconds,
+                                       site=self.site_id,
+                                       status=task.status)
+            if self.metrics_every:
+                n = self.metrics.completed + self.metrics.cancelled
+                if n % self.metrics_every == 0:
+                    # periodic registry snapshot on the event stream, so
+                    # subscribers scrape metrics off the bus they already
+                    # watch (outside the manager lock: collectors take
+                    # plane locks of their own)
+                    self.bus.publish("metrics",
+                                     data=self.registry.snapshot(),
+                                     site_id=self.site_id)
         if refit_due is not None:
             self._auto_refit(refit_due)
         self._pump()
@@ -855,6 +967,7 @@ class TransferManager:
             "tenant": sub.tenant,
             "priority": sub.priority,
             "origin_site": st.origin_site or self.site_id,
+            "trace_id": sub.task.trace_id,
             "src": {"endpoint_id": sub.src.resolved_id(),
                     "path": sub.src.path},
             "dst": {"endpoint_id": sub.dst.resolved_id(),
@@ -865,7 +978,8 @@ class TransferManager:
             "nbytes": sub.nbytes_hint,
             "stats": {"predicted_seconds": st.predicted_seconds,
                       "actual_model_seconds": st.actual_model_seconds,
-                      "resumes": st.resumes},
+                      "resumes": st.resumes,
+                      "span_seconds": dict(st.span_seconds)},
             "markers": self.service.markers.export_state(task_id),
             # replica hints: where verified copies of this source
             # already live, so the adopting site's catalog can satisfy
@@ -876,6 +990,7 @@ class TransferManager:
         }
         self.service.markers.clear(task_id)
         self.service.clock.forget(task_id)
+        self.tracer.forget(task_id)
         sub.task._finish(TransferTask.HANDED_OFF)
         return payload
 
@@ -904,6 +1019,11 @@ class TransferManager:
         task.stats.actual_model_seconds = \
             carried.get("actual_model_seconds", 0.0)
         task.stats.resumes = carried.get("resumes", 0)
+        task.stats.span_seconds = dict(carried.get("span_seconds", {}))
+        # the trace id travels: spans on this site stitch into the same
+        # timeline the task accrued at its origin
+        task.trace_id = payload.get("trace_id") \
+            or f"trace-{task.task_id}"
         if payload.get("state") == "cancelled":
             # terminal on arrival: registered for observability only —
             # and its markers are NOT installed (nothing would ever

@@ -46,9 +46,10 @@ import os
 import threading
 import time
 from collections import deque
-from contextlib import contextmanager
+from contextlib import ExitStack, contextmanager
 from dataclasses import dataclass, field
 
+from ..obs.trace import NULL_TRACER
 from .clock import (Clock, DEFAULT_CLOCK, Link, bind_charge_owner, charge_to,
                     loopback)
 from .connector import (AppChannel, ByteRange, Connector, Credential, Session,
@@ -222,6 +223,30 @@ class TaskStats:
     actual_model_seconds: float = 0.0
     #: how many times the task was paused and resumed
     resumes: int = 0
+    #: span category -> model seconds charged under that category's
+    #: spans (observability plane; merged per run by the manager, and
+    #: traveling with the task across federation handoffs)
+    span_seconds: dict = field(default_factory=dict)
+
+    def time_budget(self) -> dict[str, float]:
+        """Decompose ``actual_model_seconds`` into span categories.
+
+        The categorized tallies come from the very same ``Clock.sleep``
+        calls that produced ``actual_model_seconds`` (obs plane: every
+        charge lands on the innermost open span), and the ``"other"``
+        bucket is defined as the remainder — so the returned values sum
+        to the charged total by construction, making the Advisor's Eq. 4
+        prediction error *attributable* ("the model missed because
+        backoff, not wire")."""
+        budget: dict[str, float] = {}
+        categorized = 0.0
+        for cat in sorted(self.span_seconds):
+            secs = self.span_seconds[cat]
+            budget[cat] = budget.get(cat, 0.0) + secs
+            categorized += secs
+        budget["other"] = budget.get("other", 0.0) \
+            + (self.actual_model_seconds - categorized)
+        return budget
 
 
 class TransferTask:
@@ -233,16 +258,29 @@ class TransferTask:
     #: handed to a peer site, which owns its lifecycle from here on
     HANDED_OFF = "HANDED_OFF"
 
-    RATE_WINDOW = 4096  # ring-buffer capacity for throughput samples
+    RATE_WINDOW = 4096   # ring-buffer capacity for throughput samples
+    EVENTS_WINDOW = 4096  # ring-buffer capacity for the event log
 
     def __init__(self, task_id: str, clock: Clock | None = None):
         self.task_id = task_id
         self.status = self.PENDING
         self.stats = TaskStats()
         self.files: list[FileResult] = []
-        #: (model_time, message) pairs — stamped with the owning
-        #: service's clock, so same-seed runs log identical streams
-        self.events: list[tuple[float, str]] = []
+        #: observability plane: the trace id this task's spans attach
+        #: to; assigned by the manager at submit and carried across
+        #: federation handoffs in the TransferSpec
+        self.trace_id = ""
+        # (model_time, message) pairs — stamped with the owning
+        # service's clock, so same-seed runs log identical streams.
+        # Bounded ring (mirrors the StatusBus subscriber discipline):
+        # the oldest entries fall off past EVENTS_WINDOW, counted
+        # exactly in events_dropped, so a million-block task can't grow
+        # memory without limit.
+        self._events: deque[tuple[float, str]] = deque()
+        self.events_dropped = 0
+        #: rate samples shed by the bounded ring (exact count; the ring
+        #: itself is the deque's maxlen)
+        self.rate_samples_dropped = 0
         self._clock = clock or DEFAULT_CLOCK
         #: service-plane hook: the owning manager points this at its
         #: StatusBus so progress ticks stream to subscribers
@@ -284,9 +322,20 @@ class TransferTask:
         """True once no run loop is executing the task (done OR paused)."""
         return self._idle.wait(timeout)
 
+    @property
+    def events(self) -> list[tuple[float, str]]:
+        """Snapshot of the retained event log, oldest first (a list, so
+        existing ``task.events[-5:]`` readers keep working); entries
+        shed by the ring are counted in ``events_dropped``."""
+        with self._lock:
+            return list(self._events)
+
     def log(self, msg: str) -> None:
         with self._lock:
-            self.events.append((self._clock.virtual_elapsed, msg))
+            if len(self._events) >= self.EVENTS_WINDOW:
+                self._events.popleft()
+                self.events_dropped += 1
+            self._events.append((self._clock.virtual_elapsed, msg))
 
     def _bytes_tick(self, n: int) -> None:
         """Credit (or, for integrity re-sends, un-credit) progress.
@@ -296,6 +345,8 @@ class TransferTask:
         now = self._clock.virtual_elapsed
         with self._lock:
             self.stats.bytes_done += n
+            if len(self._rate_samples) == self.RATE_WINDOW:
+                self.rate_samples_dropped += 1  # maxlen sheds the oldest
             self._rate_samples.append((now, self.stats.bytes_done))
             done, total = self.stats.bytes_done, self.stats.bytes_total
         emit = self._emit
@@ -973,8 +1024,14 @@ class TransferService:
 
     def __init__(self, credential_store: CredentialStore | None = None,
                  marker_root: str | None = None, clock: Clock | None = None,
-                 data_link_factory=None, health=None, catalog=None):
+                 data_link_factory=None, health=None, catalog=None,
+                 tracer=None):
         self.creds = credential_store or CredentialStore()
+        #: observability plane: span collector every run's charging
+        #: sites report to.  Defaults to the shared disabled tracer so a
+        #: bare service pays (almost) nothing; the TransferManager
+        #: installs a live one
+        self.tracer = tracer or NULL_TRACER
         self.markers = MarkerStore(marker_root or os.path.join(
             os.environ.get("TMPDIR", "/tmp"), "repro-markers"))
         self.clock = clock or DEFAULT_CLOCK
@@ -1076,12 +1133,20 @@ class TransferService:
             # all model time this run charges — control exchanges, link
             # transmission, API admission, retry backoff, injected
             # latency — is attributed to this task, across every thread
-            # the run fans out into (see clock.charge_to / bind_charge_owner)
-            with charge_to(task.task_id):
+            # the run fans out into (see clock.charge_to /
+            # bind_charge_owner); the tracer binding rides the same
+            # thread-local slot so spans attach to this task everywhere
+            with charge_to(task.task_id), \
+                    self.tracer.bind(task.trace_id
+                                     or f"trace-{task.task_id}",
+                                     task.task_id), \
+                    ExitStack() as stack:
                 # third-party coordination / endpoint activation (§5.4)
-                self.clock.sleep(opt.startup_cost)
-                with scope(src, dst) as (s_src, s_dst):
-                    self._execute(task, src, dst, s_src, s_dst, opt)
+                with self.tracer.span("startup", "startup"):
+                    self.clock.sleep(opt.startup_cost)
+                with self.tracer.span("session-acquire", "session"):
+                    s_src, s_dst = stack.enter_context(scope(src, dst))
+                self._execute(task, src, dst, s_src, s_dst, opt)
         except Exception as e:
             task.log(f"FATAL {type(e).__name__}: {e}")
             task.stats.wall_seconds += time.monotonic() - t_start  # lint: disable=R001(wall_seconds stat is real elapsed time by design)
@@ -1346,7 +1411,9 @@ class TransferService:
                                         link, fstate, state, sp, dp, size)
                 return
         # one pipelined control-channel exchange for the whole batch
-        self.clock.sleep(opt.file_pipeline_cost)
+        with self.tracer.span("batch-pipeline", "overhead",
+                              files=len(files)):
+            self.clock.sleep(opt.file_pipeline_cost)
         alg = opt.checksum_algorithm if opt.integrity else None
 
         entries: list[_BatchEntry] = []
@@ -1399,8 +1466,10 @@ class TransferService:
 
             def do_send() -> None:
                 try:
-                    src.connector.send_batch(s_src, [e.spath for e in entries],
-                                             send_factory)
+                    with self.tracer.span("batch-send", "wire",
+                                          files=len(entries)):
+                        src.connector.send_batch(
+                            s_src, [e.spath for e in entries], send_factory)
                 except Exception as exc:  # batch-level failure
                     for e in entries:
                         e.pipe.fail(exc)
@@ -1409,8 +1478,10 @@ class TransferService:
                                       daemon=True)
             sender.start()
             try:
-                dst.connector.recv_batch(s_dst, [e.dpath for e in entries],
-                                         recv_factory)
+                with self.tracer.span("batch-recv", "wire",
+                                      files=len(entries)):
+                    dst.connector.recv_batch(
+                        s_dst, [e.dpath for e in entries], recv_factory)
             except Exception as exc:  # batch-level failure
                 for e in entries:
                     e.pipe.fail(exc)
@@ -1562,7 +1633,9 @@ class TransferService:
                     result.attempts = attempts
                     patience_until = None
                     # pipelined per-file command exchange on the control channel
-                    self.clock.sleep(opt.file_pipeline_cost)
+                    with self.tracer.span("pipeline", "overhead",
+                                          path=spath, attempt=attempts):
+                        self.clock.sleep(opt.file_pipeline_cost)
                     checksum = self._move_one(task, src, dst, s_src, s_dst,
                                               opt, link, st, spath, dpath,
                                               size)
@@ -1668,7 +1741,10 @@ class TransferService:
                                   * jitter)
                 task.log(f"transient fault on {spath} "
                          f"({type(e).__name__}); retry in {backoff:.2f}s")
-                self.clock.sleep(backoff)
+                with self.tracer.span("backoff", "backoff", path=spath,
+                                      attempt=attempts,
+                                      kind=type(e).__name__):
+                    self.clock.sleep(backoff)
             except IntegrityError as e:
                 result.error = f"integrity retries exhausted: {e}"
                 break
@@ -1802,7 +1878,9 @@ class TransferService:
 
         def do_send() -> None:
             try:
-                dst.connector.send(s_dst, entry.path, pipe.send_channel)
+                with self.tracer.span("replica-read", "replica",
+                                      path=entry.path):
+                    dst.connector.send(s_dst, entry.path, pipe.send_channel)
             except Exception as e:
                 send_err.append(e)
                 pipe.fail(e)
@@ -1812,7 +1890,8 @@ class TransferService:
         sender.start()
         recv_err: Exception | None = None
         try:
-            dst.connector.recv(s_dst, dpath, pipe.recv_channel)
+            with self.tracer.span("replica-write", "replica", path=dpath):
+                dst.connector.recv(s_dst, dpath, pipe.recv_channel)
         except Exception as e:
             recv_err = e
         sender.join()
@@ -1880,8 +1959,10 @@ class TransferService:
         comp = compose_digests(st.get("digests", {}), size,
                                opt.checksum_algorithm)
         if comp is not None:
-            return comp
-        return src.connector.checksum(s_src, spath, opt.checksum_algorithm)
+            return comp  # pure fold, no storage op — nothing to trace
+        with self.tracer.span("source-checksum", "integrity", path=spath):
+            return src.connector.checksum(s_src, spath,
+                                          opt.checksum_algorithm)
 
     def _move_one(self, task, src, dst, s_src, s_dst, opt, link,
                   st: dict, spath: str, dpath: str,
@@ -1941,7 +2022,11 @@ class TransferService:
 
         def do_send() -> None:
             try:
-                src.connector.send(s_src, spath, pipe.send_channel)
+                # the sender thread pays link transmission (pipe.push):
+                # the wire span lives here, bound to this task's trace
+                # through bind_charge_owner
+                with self.tracer.span("send", "wire", path=spath):
+                    src.connector.send(s_src, spath, pipe.send_channel)
             except Exception as e:
                 send_err.append(e)
                 pipe.fail(e)
@@ -1951,7 +2036,8 @@ class TransferService:
         sender.start()
         recv_err: Exception | None = None
         try:
-            dst.connector.recv(s_dst, dpath, pipe.recv_channel)
+            with self.tracer.span("recv", "wire", path=dpath):
+                dst.connector.recv(s_dst, dpath, pipe.recv_channel)
         except Exception as e:
             recv_err = e
         sender.join()
@@ -2003,11 +2089,14 @@ class TransferService:
         full dst read, never a source re-read."""
         if src_checksum is None:
             return True
-        if src_checksum.startswith(COMPOSITE_PREFIX):
-            return self._verify_composite(dst, s_dst, dpath, src_checksum,
-                                          digests or {}, opt)
-        dst_sum = dst.connector.checksum(s_dst, dpath, opt.checksum_algorithm)
-        return dst_sum == src_checksum
+        with self.tracer.span("verify", "integrity", path=dpath):
+            if src_checksum.startswith(COMPOSITE_PREFIX):
+                return self._verify_composite(dst, s_dst, dpath,
+                                              src_checksum, digests or {},
+                                              opt)
+            dst_sum = dst.connector.checksum(s_dst, dpath,
+                                             opt.checksum_algorithm)
+            return dst_sum == src_checksum
 
     def _verify_composite(self, dst: Endpoint, s_dst: Session, dpath: str,
                           src_checksum: str, digests: dict,

@@ -551,9 +551,16 @@ class FederatedCoordinator:
             self.metrics.placements.get(site.site_id, 0) + 1
         self.metrics.placement_log.append(
             (spec.task_id, site.site_id, reason))
+        now = site.manager.service.clock.virtual_elapsed
+        # charge-free adoption marker on the adopting site's tracer: the
+        # traveled trace id stitches this into the task's origin timeline
+        site.manager.tracer.record(
+            "adopt", "queue", now, now,
+            trace_id=spec.trace_id or task.trace_id,
+            task_id=spec.task_id, site=site.site_id, reason=reason)
         self.bus.publish("placed", task_id=spec.task_id,
                          data={"site": site.site_id, "reason": reason},
-                         t=site.manager.service.clock.virtual_elapsed)
+                         t=now)
         return task
 
     # ---- handoff ---------------------------------------------------------
@@ -647,6 +654,7 @@ class FederatedCoordinator:
             origin = self._sites[origin_id]
             self._precheck_adoption(task_id, origin_id, to_site)
         with charge_to(self.charge_owner):
+            h0 = origin.manager.service.clock.virtual_elapsed
             payload = self._drain_export(origin, task_id, timeout)
             if payload is None:
                 return None
@@ -673,6 +681,14 @@ class FederatedCoordinator:
                     raise
                 task = self._import_at_locked(site, spec, reason="handoff")
                 self.metrics.handoffs += 1
+                # the drain→adoption window, on the origin's clock;
+                # record() charges nothing, so the coordinator's
+                # third-party invariant (0.0 model seconds) holds
+                origin.manager.tracer.record(
+                    "handoff", "queue", h0,
+                    origin.manager.service.clock.virtual_elapsed,
+                    trace_id=spec.trace_id, task_id=task_id,
+                    origin=origin_id, to=site.site_id)
         return task
 
     # ---- site failure ----------------------------------------------------

@@ -55,6 +55,10 @@ class TransferSpec:
     n_files: int = 0
     nbytes: int = 0
     origin_site: str = ""
+    #: observability: the task's trace id travels with the spec, so a
+    #: handed-off task's spans on the adopting site stitch into the
+    #: same timeline as the spans it accrued at the origin
+    trace_id: str = ""
     stats: dict = field(default_factory=dict)
     markers: dict = field(default_factory=lambda: {"files": {}})
     #: replica hints: JSON-clean catalog entry dicts naming verified
@@ -106,6 +110,7 @@ class TransferSpec:
             "tenant": self.tenant,
             "priority": self.priority,
             "origin_site": self.origin_site,
+            "trace_id": self.trace_id,
             "src": {"endpoint_id": self.src_endpoint,
                     "path": self.src_path},
             "dst": {"endpoint_id": self.dst_endpoint,
@@ -135,6 +140,7 @@ class TransferSpec:
             n_files=payload.get("n_files", 0),
             nbytes=payload.get("nbytes", 0),
             origin_site=payload.get("origin_site", ""),
+            trace_id=payload.get("trace_id", ""),
             stats=dict(payload.get("stats", {})),
             markers=payload.get("markers") or {"files": {}},
             replicas=list(payload.get("replicas", []) or []),

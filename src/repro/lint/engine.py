@@ -15,6 +15,8 @@ mirrors ``src/repro/...`` exercise the exact production scoping):
   ``self._lock`` idiom).
 * **R004** ``core/`` only, where the breaker taxonomy is load-bearing.
 * **R005** ``svc/`` (the ``StatusBus.publish`` entry point).
+* **R006** everywhere (it only fires on the ``*.span(...)`` idiom —
+  the observability plane's context-manager-only span discipline).
 
 Suppressions
 ------------

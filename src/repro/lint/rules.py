@@ -440,6 +440,39 @@ def check_r005(mod: ModuleInfo) -> list[Finding]:
 
 
 # --------------------------------------------------------------------------
+# R006 — span discipline
+# --------------------------------------------------------------------------
+
+
+def check_r006(mod: ModuleInfo) -> list[Finding]:
+    """Span discipline: a ``*.span(...)`` call (``Tracer.span`` and any
+    API shaped like it) may only appear as a ``with`` context
+    expression.  A span opened and never exited stays the innermost
+    span on its thread forever: every later ``Clock.sleep`` charge on
+    that thread lands in the wrong category, silently corrupting the
+    ``TaskStats.time_budget()`` decomposition — so the guard must be
+    scope-shaped, never a bare call or a stored context manager."""
+    with_exprs: set[int] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                with_exprs.add(id(item.context_expr))
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "span" \
+                and id(node) not in with_exprs:
+            out.append(Finding(
+                "R006", mod.rel, node.lineno,
+                f"`{_dotted(node.func) or '<expr>.span'}(...)` outside "
+                "a `with` — Tracer.span is a context manager ONLY; a "
+                "leaked open span miscategorizes every later charge on "
+                "its thread"))
+    return out
+
+
+# --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
 
@@ -450,4 +483,5 @@ RULES = {
     "R003": ("*_locked lock discipline", check_r003),
     "R004": ("core/ error taxonomy", check_r004),
     "R005": ("StatusBus.publish never blocks", check_r005),
+    "R006": ("Tracer.span used as a `with` context manager", check_r006),
 }

@@ -32,6 +32,11 @@ The federation coordinator additionally publishes ``placed`` (every
 spec placement, with the reason: submit/handoff/failover/rebalance),
 ``failover`` and ``beat``.
 
+The observability plane adds ``metrics``: a periodic
+:class:`~repro.obs.MetricsRegistry` snapshot published by the manager
+every N terminal completions, so subscribers can scrape the fleet's
+counters off the same stream they already watch for lifecycle events.
+
 Backpressure contract
 ---------------------
 Publishing never blocks and never drops for *fast* subscribers; each
@@ -63,7 +68,7 @@ from ..core.clock import DEFAULT_CLOCK, Clock
 EVENT_TYPES = (
     "queued", "dispatched", "progress", "paused", "resumed",
     "handed_off", "done", "failed", "cancelled", "digest",
-    "placed", "failover", "beat",
+    "placed", "failover", "beat", "metrics",
 )
 
 

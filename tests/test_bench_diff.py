@@ -20,6 +20,9 @@ BASE = {
     "perfile": {
         "s3/conn-local/up": {"rho": 0.99, "t0_speedup": 10.0},
     },
+    "obs": {
+        "goodput_ratio": 0.98,
+    },
 }
 
 

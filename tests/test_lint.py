@@ -344,6 +344,7 @@ def test_cli_reports_seeded_violation(tmp_path):
 
 
 def test_rules_registry_complete():
-    assert set(RULES) == {"R001", "R002", "R003", "R004", "R005"}
+    assert set(RULES) == {"R001", "R002", "R003", "R004", "R005",
+                          "R006"}
     for rule, (title, check) in RULES.items():
         assert title and callable(check)
